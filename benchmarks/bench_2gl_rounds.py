@@ -1,0 +1,36 @@
+"""Paper Fig. 6: communication rounds, D1-baseline vs D1-2GL.
+
+The 2GL payoff is fewer recoloring rounds on regular meshes (second-layer
+ghosts are interior on their owners, hence fixed).  ``derived`` =
+rounds;payload — the paper's trade: fewer rounds × bigger exchanges.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.distributed import color_distributed
+from repro.core.validate import is_proper_d1
+from repro.graph.generators import hex_mesh, rmat
+from repro.graph.partition import partition_graph
+
+
+def run() -> list[str]:
+    rows = []
+    # Two regimes: an easy mesh (few conflicts -> both converge in 1 round,
+    # 2GL only costs payload) and a conflict-dense graph where the paper's
+    # Fig-6 effect appears (2GL halves the rounds at high rank counts).
+    for g in (hex_mesh(32, 12, 12, name="queen_like"),
+              rmat(11, 8, seed=1, name="conflict_dense")):
+      for p in (2, 4, 8, 16):
+        strat = "block" if g.name == "queen_like" else "edge_balanced"
+        pg1 = partition_graph(g, p, strategy=strat)
+        pg2 = partition_graph(g, p, strategy=strat, second_layer=True)
+        for name, pg, problem in [("d1_baseline", pg1, "d1"),
+                                  ("d1_2gl", pg2, "d1_2gl")]:
+            res, us = timed(lambda pg=pg, pr=problem: color_distributed(
+                pg, problem=pr, recolor_degrees=False, engine="simulate"))
+            assert is_proper_d1(g, res.colors)
+            rows.append(row(
+                f"fig6/{g.name}/p{p}/{name}", us,
+                f"rounds={res.rounds};payload={res.comm_bytes_per_round};"
+                f"colors={res.n_colors}"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 2 (a/b): D1-baseline vs D1-recolordegree vs Zoltan-style.
+
+Performance-profile data over the Table-1 analogue suite: execution time
+and number of colors for each approach on every graph, plus serial greedy
+as the quality reference.  ``derived`` = colors|rounds.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.baseline import color_baseline
+from repro.core.distributed import color_distributed
+from repro.core.greedy import greedy_d1
+from repro.core.jones_plassmann import color_jones_plassmann
+from repro.core.validate import is_proper_d1, num_colors
+from repro.graph.generators import paper_suite
+from repro.graph.partition import partition_graph
+
+PARTS = 8
+
+
+def run(scale: str = "small") -> list[str]:
+    rows = []
+    for g in paper_suite(scale):
+        pg = partition_graph(g, PARTS, strategy="edge_balanced")
+        variants = {
+            "d1_recolordegree": lambda: color_distributed(
+                pg, problem="d1", recolor_degrees=True, engine="simulate"),
+            "d1_baseline": lambda: color_distributed(
+                pg, problem="d1", recolor_degrees=False, engine="simulate"),
+            "zoltan_style": lambda: color_baseline(pg, n_batches=8),
+            "jones_plassmann": lambda: color_jones_plassmann(pg),
+        }
+        for name, fn in variants.items():
+            res, us = timed(fn)
+            assert is_proper_d1(g, res.colors), (g.name, name)
+            rows.append(row(f"fig2/{g.name}/{name}", us,
+                            f"colors={res.n_colors};rounds={res.rounds}"))
+        _, us = timed(lambda: greedy_d1(g))
+        rows.append(row(f"fig2/{g.name}/serial_greedy", us,
+                        f"colors={num_colors(greedy_d1(g))};rounds=0"))
+    return rows

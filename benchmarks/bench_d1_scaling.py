@@ -1,0 +1,30 @@
+"""Paper Fig. 3/4: D1 strong scaling + comm/comp split.
+
+Fixed graphs (PDE-mesh analogue + social analogue), part counts 1..16.
+``derived`` = colors;rounds;comm_bytes_per_round (the communication-volume
+axis of Fig. 4 — wall time on 1 CPU core is not the reproduction axis).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.distributed import color_distributed
+from repro.core.validate import is_proper_d1
+from repro.graph.generators import hex_mesh, rmat
+from repro.graph.partition import partition_graph
+
+
+def run() -> list[str]:
+    rows = []
+    graphs = [hex_mesh(24, 16, 16, name="queen_like"),
+              rmat(12, 12, seed=7, name="friendster_like")]
+    for g in graphs:
+        for p in (1, 2, 4, 8, 16):
+            pg = partition_graph(g, p, strategy="edge_balanced")
+            res, us = timed(lambda pg=pg: color_distributed(
+                pg, problem="d1", engine="simulate"))
+            assert is_proper_d1(g, res.colors)
+            rows.append(row(
+                f"fig3/{g.name}/p{p}", us,
+                f"colors={res.n_colors};rounds={res.rounds};"
+                f"comm={res.comm_bytes_per_round};conf={res.total_conflicts}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Fig. 7/8/9: distance-2 coloring vs Zoltan-style baseline.
+
+Eight-graph subset analogue (PDE + road + rgg + social classes);
+``derived`` = colors;rounds — Fig. 7's two axes.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.baseline import color_baseline
+from repro.core.distributed import color_distributed
+from repro.core.greedy import greedy_d2
+from repro.core.validate import is_proper_d2, num_colors
+from repro.graph.generators import grid_2d, hex_mesh, random_geometric, rmat
+from repro.graph.partition import partition_graph
+
+PARTS = 8
+
+
+def run() -> list[str]:
+    rows = []
+    graphs = [
+        hex_mesh(16, 12, 12, name="bump_like"),
+        hex_mesh(20, 14, 14, name="queen_like"),
+        grid_2d(72, 72, name="osm_like"),
+        random_geometric(3000, 0.025, seed=2, name="rgg_like"),
+        # CPU-scale note: D2 on heavy-skew rmat is minutes-slow on one
+        # core (hub two-hop ~ n); a lighter skew keeps the suite fast.
+        rmat(9, 4, seed=9, name="livejournal_like"),
+    ]
+    for g in graphs:
+        pg = partition_graph(g, PARTS, strategy="edge_balanced", second_layer=True)
+        res, us = timed(lambda pg=pg: color_distributed(
+            pg, problem="d2", engine="simulate"))
+        assert is_proper_d2(g, res.colors), g.name
+        rows.append(row(f"fig7/{g.name}/d2", us,
+                        f"colors={res.n_colors};rounds={res.rounds}"))
+        resb, usb = timed(lambda pg=pg: color_baseline(
+            pg, problem="d2", n_batches=8))
+        assert is_proper_d2(g, resb.colors), g.name
+        rows.append(row(f"fig7/{g.name}/zoltan_style", usb,
+                        f"colors={resb.n_colors};rounds={resb.rounds}"))
+        rows.append(row(f"fig7/{g.name}/serial_greedy", 0,
+                        f"colors={num_colors(greedy_d2(g))};rounds=0"))
+    return rows

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference.
+
+Interpret mode runs the kernel body in Python on CPU — the timing column
+is NOT a TPU number; the purpose here is (a) correctness at bench scale
+and (b) the op-level call graph for the roofline discussion.  ``derived``
+= checksum equality with the oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.distributed import build_device_state
+from repro.graph.generators import rmat
+from repro.graph.partition import partition_graph
+from repro.kernels import ops, ref
+
+
+def run() -> list[str]:
+    rows = []
+    g = rmat(10, 8, seed=3)
+    pg = partition_graph(g, 2, second_layer=True)
+    st = build_device_state(pg, "d2")
+    nl = pg.n_local
+    rng = np.random.default_rng(0)
+    tab = jnp.asarray(np.concatenate(
+        [rng.integers(0, 9, nl + pg.n_ghost).astype(np.int32), [0]]))
+    base = jnp.ones(nl, jnp.int32)
+    active = jnp.asarray(st["active0"][0])
+    adj = jnp.asarray(st["adj_cidx"][0])
+    deg_tab = jnp.asarray(st["deg_tab"][0])
+    gid_tab = jnp.asarray(st["gid_tab"][0])
+    ext = jnp.asarray(st["ext_adj_cidx"][0])
+
+    (kc, kb), us_k = timed(lambda: ops.vb_bit_assign(adj, tab[:nl], base, active, tab))
+    (rc, rb), us_r = timed(lambda: ref.vb_bit_assign_ref(adj, tab[:nl], base, active, tab))
+    ok = bool((np.asarray(kc) == np.asarray(rc)).all())
+    rows.append(row("kernel/vb_bit/pallas_interp", us_k, f"match_ref={ok}"))
+    rows.append(row("kernel/vb_bit/jnp_ref", us_r, "oracle"))
+
+    out_k, us_k = timed(lambda: ops.conflict_detect(
+        adj, tab[:nl], deg_tab[:nl], gid_tab[:nl],
+        jnp.asarray(st["is_boundary"][0]), tab, deg_tab, gid_tab, nl))
+    out_r, us_r = timed(lambda: ref.conflict_detect_ref(
+        adj, tab[:nl], deg_tab[:nl], gid_tab[:nl],
+        jnp.asarray(st["is_boundary"][0]), tab, deg_tab, gid_tab, nl))
+    ok = bool((np.asarray(out_k[0]) == np.asarray(out_r[0])).all())
+    rows.append(row("kernel/conflict/pallas_interp", us_k, f"match_ref={ok}"))
+    rows.append(row("kernel/conflict/jnp_ref", us_r, "oracle"))
+
+    f_k, us_k = timed(lambda: ops.d2_forbidden(adj, base, active, tab[:nl], tab, ext))
+    f_r, us_r = timed(lambda: ref.d2_forbidden_ref(adj, base, active, tab[:nl], tab, ext))
+    ok = bool((np.asarray(f_k) == np.asarray(f_r)).all())
+    rows.append(row("kernel/d2_forbidden/pallas_interp", us_k, f"match_ref={ok}"))
+    rows.append(row("kernel/d2_forbidden/jnp_ref", us_r, "oracle"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 5 / Fig. 10: weak scaling on 3D hexahedral mesh slabs.
+
+Constant vertices-per-part, growing part count (the paper grows one mesh
+axis and partitions in slabs along it).  ``derived`` = rounds + conflicts:
+the paper's observation is that boundary size doubling drives recoloring
+workload, visible here as conflicts/rounds staying flat while total work
+scales.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, timed
+from repro.core.distributed import color_distributed
+from repro.core.validate import is_proper_d1, is_proper_d2
+from repro.graph.generators import hex_mesh
+from repro.graph.partition import partition_graph
+
+SLAB = 8          # x-planes per part
+NY = NZ = 16      # plane = 256 vertices; per-part = 2048 vertices
+
+
+def run(d2: bool = False) -> list[str]:
+    rows = []
+    problem = "d2" if d2 else "d1"
+    for p in (1, 2, 4, 8):
+        g = hex_mesh(SLAB * p, NY, NZ, name=f"hex_w{p}")
+        pg = partition_graph(g, p, second_layer=problem == "d2")
+        res, us = timed(lambda pg=pg: color_distributed(
+            pg, problem=problem, engine="simulate",
+            exchange="halo" if pg.halo_neighbors_ok() and p > 1 else "all_gather"))
+        ok = (is_proper_d2 if d2 else is_proper_d1)(g, res.colors)
+        assert ok, (problem, p)
+        rows.append(row(
+            f"fig{'10' if d2 else '5'}/hex/p{p}", us,
+            f"colors={res.n_colors};rounds={res.rounds};"
+            f"conf={res.total_conflicts};n={g.n}"))
+    return rows

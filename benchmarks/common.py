@@ -1,0 +1,25 @@
+"""Shared benchmark helpers.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows (harness
+contract).  ``derived`` carries the paper's metric for that figure —
+colors / rounds / bytes — since wall-clock on 1 CPU core is not the
+reproduction axis (DESIGN.md §8 caveat).
+"""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    """(result, us_per_call) — first call includes compile (jit cache warm
+    afterwards); we time the post-warmup call."""
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,65 @@
+"""Render §Dry-run / §Roofline markdown tables from dry-run JSONL records.
+
+Usage: PYTHONPATH=src python -m benchmarks.render_roofline \
+           dryrun_results_baseline.jsonl [dryrun_results_optimized.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    recs = [json.loads(l) for l in open(path)]
+    return {(r["arch"], r["shape"], r.get("mesh", "-")): r for r in recs}
+
+
+def fmt_row(r):
+    if r["status"] == "skip":
+        return None
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+        f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+        f"| {min(r['useful_flops_ratio'], 99.0):.2f} "
+        f"| {r.get('peak_memory_in_bytes', 0)/2**30:.2f} |"
+    )
+
+
+def main():
+    paths = sys.argv[1:]
+    for path in paths:
+        recs = load(path)
+        print(f"\n### Roofline table — {path} (single-pod 16×16 mesh)\n")
+        print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+              "| dominant | roofline_frac | useful_ratio | peak GiB |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        skips = []
+        for key in sorted(recs):
+            r = recs[key]
+            if r["status"] == "skip":
+                skips.append(r)
+                continue
+            if r.get("mesh") != "16x16":
+                continue
+            row = fmt_row(r)
+            if row:
+                print(row)
+        print("\nMulti-pod (2×16×16) compile status: "
+              + ", ".join(sorted({
+                  f"{r['arch']}×{r['shape']}=OK" for r in recs.values()
+                  if r.get("mesh") == "2x16x16" and r["status"] == "ok"
+              })) )
+        if skips:
+            print("\nSkipped cells (documented in DESIGN.md §Arch-applicability):")
+            seen = set()
+            for r in skips:
+                k = (r["arch"], r["shape"])
+                if k in seen:
+                    continue
+                seen.add(k)
+                print(f"* {r['arch']} × {r['shape']}: {r['reason']}")
+
+
+if __name__ == "__main__":
+    main()

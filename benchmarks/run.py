@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a]``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    bench_2gl_rounds,
+    bench_d1_quality,
+    bench_d1_scaling,
+    bench_d2,
+    bench_kernels,
+    bench_moe_a2a,
+    bench_pd2,
+    bench_weak_scaling,
+)
+
+SUITES = {
+    "fig2": lambda: bench_d1_quality.run(),
+    "fig3": lambda: bench_d1_scaling.run(),
+    "fig5": lambda: bench_weak_scaling.run(d2=False),
+    "fig6": lambda: bench_2gl_rounds.run(),
+    "fig7": lambda: bench_d2.run(),
+    "fig10": lambda: bench_weak_scaling.run(d2=True),
+    "fig11": lambda: bench_pd2.run(),
+    "kernels": lambda: bench_kernels.run(),
+    "a2a": lambda: bench_moe_a2a.run(),
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for key in which:
+        t0 = time.time()
+        for r in SUITES[key]():
+            print(r, flush=True)
+        print(f"# suite {key} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

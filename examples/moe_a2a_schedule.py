@@ -1,0 +1,48 @@
+"""Beyond-paper: schedule a real MoE dispatch all-to-all with D1 coloring.
+
+Routes a token batch through the qwen3-moe smoke router, derives the
+device→device traffic matrix under expert-parallel sharding, and colors
+the transfer conflict graph (paper's D1 on the line graph) into
+contention-free phases — compared against the König lower bound.
+
+Run:  PYTHONPATH=src python examples/moe_a2a_schedule.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.a2a_schedule import phase_lower_bound, schedule_a2a
+from repro.models.transformer import init_params
+
+P_DEVICES = 8  # expert-parallel group size
+
+cfg = get_smoke("qwen3_moe_30b_a3b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+router = params["blocks"]["moe"]["router"][0]          # (D, E) layer 0
+
+# 1. Route a batch of tokens.
+toks = jax.random.normal(jax.random.PRNGKey(1), (P_DEVICES * 64, cfg.d_model))
+logits = toks @ router
+_, expert_ids = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.experts_per_token)
+expert_ids = np.asarray(expert_ids)
+
+# 2. Expert-parallel traffic: token on device s -> expert e's device.
+experts_per_dev = cfg.n_experts // P_DEVICES
+src_dev = np.repeat(np.arange(P_DEVICES), 64 * cfg.experts_per_token)
+dst_dev = (expert_ids // experts_per_dev).reshape(-1)
+traffic = np.zeros((P_DEVICES, P_DEVICES))
+np.add.at(traffic, (src_dev, dst_dev), 1)
+print("traffic matrix (tokens):")
+print(traffic.astype(int))
+
+# 3. Color the transfer conflict graph into phases.
+phases = schedule_a2a(traffic)
+lb = phase_lower_bound(traffic)
+print(f"\nD1-colored schedule: {len(phases)} contention-free phases "
+      f"(König lower bound {lb})")
+for i, ph in enumerate(phases[:4]):
+    print(f"  phase {i}: {ph}")
+if len(phases) > 4:
+    print(f"  ... {len(phases) - 4} more")
+assert len(phases) <= 2 * lb

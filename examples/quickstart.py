@@ -1,0 +1,42 @@
+"""Quickstart: distributed-color a graph, validate, and inspect the result.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(Works on 1 CPU device — the SPMD program runs under the vmap simulator;
+on a real mesh the identical program runs under shard_map.)
+"""
+import numpy as np
+
+from repro.core import (
+    color_distributed,
+    greedy_d1,
+    is_proper_d1,
+    num_colors,
+)
+from repro.graph.generators import hex_mesh, rmat
+from repro.graph.partition import partition_graph
+
+# 1. A PDE-style hexahedral mesh (the paper's weak-scaling input family).
+g = hex_mesh(16, 12, 12)
+print(f"graph {g.name}: {g.n} vertices, {g.num_edges} edges, maxdeg {g.max_degree}")
+
+# 2. Partition into 8 slabs with one ghost layer (paper §2.4).
+pg = partition_graph(g, 8)
+print(f"partitioned: {pg.n_parts} parts × {pg.n_local} vertices, "
+      f"{pg.n_ghost} ghost slots, halo-able: {pg.halo_neighbors_ok()}")
+
+# 3. Distributed D1 with the paper's recolorDegrees heuristic (Alg. 2+4).
+res = color_distributed(pg, problem="d1", recolor_degrees=True)
+assert res.converged and is_proper_d1(g, res.colors)
+print(f"D1: {res.n_colors} colors in {res.rounds} rounds "
+      f"({res.comm_bytes_per_round} B/round/device)")
+
+# 4. Compare with serial greedy (Alg. 1) — the quality reference.
+print(f"serial greedy: {num_colors(greedy_d1(g))} colors")
+
+# 5. Skewed social-network analogue: recolorDegrees pays off (§3.3).
+s = rmat(10, 8, seed=1)
+pgs = partition_graph(s, 8, strategy="edge_balanced")
+with_rd = color_distributed(pgs, problem="d1", recolor_degrees=True)
+without = color_distributed(pgs, problem="d1", recolor_degrees=False)
+print(f"rmat: recolorDegrees {with_rd.n_colors} colors "
+      f"vs baseline {without.n_colors} colors")

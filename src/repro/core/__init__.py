@@ -1,0 +1,32 @@
+"""Core library: the paper's distributed speculate-and-iterate coloring.
+
+Public API:
+  - color_distributed: D1 / D1-2GL / D2 / PD2 over a device mesh (shard_map)
+  - color_single_device: single-device speculate&iterate (quality baseline)
+  - greedy: serial greedy oracle (Alg. 1)
+  - validate: proper-coloring checkers
+"""
+from repro.core.greedy import greedy_d1, greedy_d2, greedy_pd2
+from repro.core.validate import (
+    is_proper_d1,
+    is_proper_d2,
+    is_proper_pd2,
+    num_colors,
+)
+from repro.core.local import local_color_d1, local_color_d2
+from repro.core.distributed import ColoringResult, color_distributed, color_single_device
+
+__all__ = [
+    "greedy_d1",
+    "greedy_d2",
+    "greedy_pd2",
+    "is_proper_d1",
+    "is_proper_d2",
+    "is_proper_pd2",
+    "num_colors",
+    "local_color_d1",
+    "local_color_d2",
+    "color_distributed",
+    "color_single_device",
+    "ColoringResult",
+]

@@ -1,0 +1,70 @@
+"""Beyond-paper application: coloring-scheduled all-to-all phases.
+
+The MoE dispatch all-to-all sends a token block from every source device
+to every expert-owning device.  Under a one-send/one-receive-per-phase
+port model, a contention-free schedule is an *edge coloring* of the
+directed traffic graph: transfers sharing a source or a destination must
+land in different phases.  Edge coloring = distance-1 vertex coloring of
+the line graph — exactly the paper's D1 algorithm, reused verbatim.
+
+König's theorem gives the lower bound: for the bipartite send/recv
+multigraph the optimum is Δ = max port degree.  Greedy/speculative D1 on
+the line graph lands within a small factor of Δ (reported by the bench);
+``recolorDegrees`` measurably tightens it on skewed traffic — the paper's
+novel heuristic paying off in an LM-serving context.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.distributed import color_single_device
+from repro.graph.csr import build_graph
+
+__all__ = ["schedule_a2a", "phase_lower_bound"]
+
+
+def phase_lower_bound(traffic: np.ndarray) -> int:
+    """Δ = max over ports of transfer count (König bound)."""
+    sends = (traffic > 0).sum(axis=1)
+    recvs = (traffic > 0).sum(axis=0)
+    return int(max(sends.max(initial=0), recvs.max(initial=0)))
+
+
+def schedule_a2a(
+    traffic: np.ndarray, *, recolor_degrees: bool = True
+) -> list[list[tuple[int, int]]]:
+    """Schedule the nonzero transfers of a (P, P) traffic matrix into
+    contention-free phases.  Returns a list of phases, each a list of
+    (src, dst) transfers with all sources and destinations distinct.
+    """
+    p = traffic.shape[0]
+    srcs, dsts = np.nonzero(traffic)
+    keep = srcs != dsts                  # local transfers need no phase
+    srcs, dsts = srcs[keep], dsts[keep]
+    n_edges = len(srcs)
+    if n_edges == 0:
+        return []
+    # Line graph: edge-vertices conflict iff same src or same dst.
+    by_src: dict[int, list[int]] = {}
+    by_dst: dict[int, list[int]] = {}
+    for i, (s, d) in enumerate(zip(srcs, dsts)):
+        by_src.setdefault(int(s), []).append(i)
+        by_dst.setdefault(int(d), []).append(i)
+    e_src, e_dst = [], []
+    for group in list(by_src.values()) + list(by_dst.values()):
+        for a in range(len(group)):
+            for b in range(a + 1, len(group)):
+                e_src.append(group[a])
+                e_dst.append(group[b])
+    lg = build_graph(np.array(e_src), np.array(e_dst), n_edges)
+    res = color_single_device(lg, problem="d1", recolor_degrees=recolor_degrees)
+    phases: dict[int, list[tuple[int, int]]] = {}
+    for i, c in enumerate(res.colors[:n_edges]):
+        phases.setdefault(int(c), []).append((int(srcs[i]), int(dsts[i])))
+    out = [phases[c] for c in sorted(phases)]
+    # Invariant: contention-free phases.
+    for ph in out:
+        ss = [s for s, _ in ph]
+        dd = [d for _, d in ph]
+        assert len(set(ss)) == len(ss) and len(set(dd)) == len(dd)
+    return out

@@ -1,0 +1,68 @@
+"""Conflict-resolution rules (paper Algorithm 4, ``Check-Conflicts``).
+
+The loser of a conflicting pair is decided by a *pure function* of
+(color, degree, hash(GID), GID), so any two parties — lanes on one device or
+two devices across the mesh — reach the same verdict with zero
+communication.  This is the paper's consistency mechanism; we keep the rule
+bit-identical to Algorithm 4:
+
+  1. colors equal and nonzero, else no conflict;
+  2. if ``recolor_degrees``: the *lower-degree* endpoint loses
+     (it is cheaper to recolor — the paper's novel heuristic, §3.3);
+  3. tie → the endpoint with the *higher* ``rand(GID)`` loses
+     (Bozdağ et al. rule);
+  4. tie → the endpoint with the higher GID loses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gid_hash", "v_loses"]
+
+
+def gid_hash(gid: jnp.ndarray) -> jnp.ndarray:
+    """``rand(GID)``: deterministic avalanche hash (lowbias32 variant).
+
+    Matches the paper's role for Bozdağ's per-vertex RNG: a fixed
+    pseudo-random value derived from the global id only.
+    """
+    x = gid.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def v_loses(
+    color_v: jnp.ndarray,
+    color_u: jnp.ndarray,
+    deg_v: jnp.ndarray,
+    deg_u: jnp.ndarray,
+    gid_v: jnp.ndarray,
+    gid_u: jnp.ndarray,
+    *,
+    recolor_degrees: bool,
+) -> jnp.ndarray:
+    """True where vertex ``v`` must be uncolored in the pair ``(v, u)``.
+
+    Vectorized Algorithm 4 from v's perspective.  ``u``'s owner evaluates
+    the mirrored call and reaches the complementary verdict.  Self-pairs
+    (``gid_v == gid_u``) are never conflicts.
+    """
+    conflict = (color_v == color_u) & (color_v > 0) & (gid_v != gid_u)
+    hv, hu = gid_hash(gid_v), gid_hash(gid_u)
+    if recolor_degrees:
+        deg_decides = deg_v != deg_u
+        v_deg_loses = deg_v < deg_u
+    else:
+        deg_decides = jnp.zeros_like(conflict)
+        v_deg_loses = jnp.zeros_like(conflict)
+    hash_decides = hv != hu
+    v_hash_loses = hv > hu
+    v_gid_loses = gid_v > gid_u
+    loses = jnp.where(
+        deg_decides, v_deg_loses, jnp.where(hash_decides, v_hash_loses, v_gid_loses)
+    )
+    return conflict & loses

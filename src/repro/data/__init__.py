@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic, shard-aware, resumable."""
+from repro.data.pipeline import SyntheticLMData
+
+__all__ = ["SyntheticLMData"]

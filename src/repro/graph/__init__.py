@@ -1,0 +1,12 @@
+"""Graph substrate: CSR/ELL structures, generators, partitioning."""
+from repro.graph.csr import Graph, build_graph, to_ell, symmetrize_edges
+from repro.graph.partition import PartitionedGraph, partition_graph
+
+__all__ = [
+    "Graph",
+    "build_graph",
+    "to_ell",
+    "symmetrize_edges",
+    "PartitionedGraph",
+    "partition_graph",
+]

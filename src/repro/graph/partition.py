@@ -1,0 +1,264 @@
+"""Graph partitioning + ghost-layer construction (paper §2.4, §3.1, §3.4).
+
+A :class:`PartitionedGraph` is the device-ready layout of a distributed
+graph: ``P`` equal-sized vertex slabs with ELL adjacency, boundary/interior
+masks, ghost tables (one or two layers), and the static index tables that
+turn the paper's MPI boundary exchange into TPU collectives:
+
+* every part owns a padded *send buffer* (its vertices that are ghosted on
+  any other part — for D1 exactly the boundary set, for 2GL/D2 it may
+  include interior vertices whose colors are fixed, which is the D1-2GL
+  insight);
+* every ghost is addressed as ``(owner_part, send_slot)`` so an
+  ``all_gather`` of send buffers followed by a static gather reconstructs
+  ghost colors — the ICI-friendly analogue of Zoltan2's all-to-allv;
+* adjacency entries are pre-translated to *color-table indices*
+  (``0..n_local-1`` = owned, ``n_local..n_local+G-1`` = ghosts, last slot =
+  sentinel pad) so neighbor-color lookup at runtime is a single gather.
+
+Partition strategies: ``block`` (contiguous slabs — the paper's hexahedral
+"slab" decomposition), ``edge_balanced`` (contiguous with per-part edge
+counts balanced — the XtraPuLP objective in 1D), ``random`` (stress test).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.csr import SENTINEL, Graph, to_ell
+
+PAD_GID = np.int32(2**31 - 2)  # phantom padding vertices
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """Device-ready partitioned graph. All arrays are stacked over parts."""
+
+    n_global: int
+    n_parts: int
+    n_local: int               # padded slab size (uniform across parts)
+    ell_width: int
+    name: str
+
+    # Per-part vertex data, shape (P, n_local).
+    vertex_gid: np.ndarray     # global id (PAD_GID for padding rows)
+    deg: np.ndarray            # true global degree
+    is_boundary: np.ndarray    # bool: has a ghost neighbor
+    # ELL adjacency, shape (P, n_local, W).
+    adj_cidx: np.ndarray       # color-table index of each neighbor
+    adj_gid: np.ndarray        # global id of each neighbor (SENTINEL pad)
+    # Ghost tables, shape (P, G).
+    ghost_gid: np.ndarray
+    ghost_deg: np.ndarray
+    ghost_part: np.ndarray     # owner part (0 for pad slots)
+    ghost_slot: np.ndarray     # slot in owner's send buffer (0 for pad)
+    ghost_is_l1: np.ndarray    # bool: first-layer ghost (direct neighbor)
+    # Send buffer, shape (P, S): local indices whose colors others need.
+    send_idx: np.ndarray       # int32 local index (0 for pad slots)
+    send_mask: np.ndarray      # bool: real slot
+    # Second ghost layer adjacency (2GL/D2 only), shape (P, G, W) or None.
+    ghost_adj_cidx: np.ndarray | None
+    ghost_adj_gid: np.ndarray | None
+
+    @property
+    def n_ghost(self) -> int:
+        return int(self.ghost_gid.shape[1])
+
+    @property
+    def send_width(self) -> int:
+        return int(self.send_idx.shape[1])
+
+    @property
+    def has_second_layer(self) -> bool:
+        return self.ghost_adj_cidx is not None
+
+    def owner_part_sets(self) -> list[set[int]]:
+        """Set of parts each part's ghosts live on (for halo feasibility)."""
+        out = []
+        for p in range(self.n_parts):
+            real = self.ghost_gid[p] != SENTINEL
+            out.append(set(np.unique(self.ghost_part[p][real]).tolist()))
+        return out
+
+    def halo_neighbors_ok(self) -> bool:
+        """True iff every ghost lives on part p-1 or p+1 (slab halo)."""
+        for p, owners in enumerate(self.owner_part_sets()):
+            if not owners <= {p - 1, p + 1}:
+                return False
+        return True
+
+
+def _split_points(graph: Graph, n_parts: int, strategy: str, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (order, split offsets into order) for the chosen strategy."""
+    n = graph.n
+    if strategy == "block":
+        order = np.arange(n, dtype=np.int64)
+        bounds = np.linspace(0, n, n_parts + 1).astype(np.int64)
+    elif strategy == "random":
+        order = np.random.default_rng(seed).permutation(n).astype(np.int64)
+        bounds = np.linspace(0, n, n_parts + 1).astype(np.int64)
+    elif strategy == "edge_balanced":
+        order = np.arange(n, dtype=np.int64)
+        # Split contiguous ranges at equal cumulative-degree points
+        # (1D XtraPuLP objective: balance edges, preserve locality).
+        cum = np.concatenate([[0], np.cumsum(graph.degrees.astype(np.int64))])
+        total = cum[-1]
+        targets = np.linspace(0, total, n_parts + 1)
+        bounds = np.searchsorted(cum, targets).astype(np.int64)
+        bounds[0], bounds[-1] = 0, n
+        bounds = np.maximum.accumulate(bounds)  # monotone safety
+    else:
+        raise ValueError(f"unknown strategy: {strategy}")
+    return order, bounds
+
+
+def partition_graph(
+    graph: Graph,
+    n_parts: int,
+    *,
+    strategy: str = "block",
+    second_layer: bool = False,
+    seed: int = 0,
+) -> PartitionedGraph:
+    """Partition ``graph`` into ``n_parts`` device-ready slabs."""
+    n = graph.n
+    order, bounds = _split_points(graph, n_parts, strategy, seed)
+    owner = np.empty(n, dtype=np.int32)
+    local_ix = np.empty(n, dtype=np.int64)
+    part_verts: list[np.ndarray] = []
+    for p in range(n_parts):
+        verts = order[bounds[p] : bounds[p + 1]]
+        part_verts.append(verts)
+        owner[verts] = p
+        local_ix[verts] = np.arange(len(verts))
+    n_local = max(int(max((len(v) for v in part_verts), default=0)), 1)
+    width = max(graph.max_degree, 1)
+
+    # --- Pass 1: per-part adjacency (global ids), ghost sets -------------
+    adj_gid = np.full((n_parts, n_local, width), SENTINEL, dtype=np.int32)
+    vertex_gid = np.full((n_parts, n_local), PAD_GID, dtype=np.int32)
+    deg = np.zeros((n_parts, n_local), dtype=np.int32)
+    is_boundary = np.zeros((n_parts, n_local), dtype=bool)
+    ghost_sets: list[np.ndarray] = []     # first-layer ghosts per part
+    ghost_l2_sets: list[np.ndarray] = []  # second-layer additions per part
+    degrees = graph.degrees
+
+    for p, verts in enumerate(part_verts):
+        k = len(verts)
+        ell = to_ell(graph, width=width, rows=verts)
+        adj_gid[p, :k] = ell
+        vertex_gid[p, :k] = verts.astype(np.int32)
+        deg[p, :k] = degrees[verts]
+        real = ell != SENTINEL
+        ext = real & (owner[np.clip(ell, 0, n - 1)] != p)
+        is_boundary[p, :k] = ext.any(axis=1)
+        l1 = np.unique(ell[ext])
+        ghost_sets.append(l1)
+        if second_layer:
+            # Second layer: neighbors of first-layer ghosts not owned by p
+            # and not already first-layer ghosts.
+            if len(l1):
+                g_ell = to_ell(graph, width=width, rows=l1.astype(np.int64))
+                cand = np.unique(g_ell[g_ell != SENTINEL])
+                cand = cand[owner[cand] != p]
+                l2 = np.setdiff1d(cand, l1, assume_unique=False)
+            else:
+                l2 = np.empty(0, dtype=np.int32)
+            ghost_l2_sets.append(l2)
+        else:
+            ghost_l2_sets.append(np.empty(0, dtype=np.int32))
+
+    # --- Pass 2: send sets (vertices ghosted anywhere) --------------------
+    needed_by: list[list[np.ndarray]] = [[] for _ in range(n_parts)]
+    for p in range(n_parts):
+        allg = np.concatenate([ghost_sets[p], ghost_l2_sets[p]])
+        if len(allg):
+            owners = owner[allg]
+            for q in np.unique(owners):
+                needed_by[q].append(allg[owners == q])
+    send_sets = []
+    for q in range(n_parts):
+        s = (
+            np.unique(np.concatenate(needed_by[q]))
+            if needed_by[q]
+            else np.empty(0, dtype=np.int64)
+        )
+        send_sets.append(s)
+    send_width = max(max((len(s) for s in send_sets), default=0), 1)
+    send_idx = np.zeros((n_parts, send_width), dtype=np.int32)
+    send_mask = np.zeros((n_parts, send_width), dtype=bool)
+    slot_of: dict[int, int] = {}
+    for q, s in enumerate(send_sets):
+        send_idx[q, : len(s)] = local_ix[s]
+        send_mask[q, : len(s)] = True
+        for j, gid in enumerate(s):
+            slot_of[int(gid)] = j
+
+    # --- Pass 3: ghost tables + color-index translation ------------------
+    n_ghost = max(
+        max((len(a) + len(b) for a, b in zip(ghost_sets, ghost_l2_sets)), default=0), 1
+    )
+    ghost_gid = np.full((n_parts, n_ghost), SENTINEL, dtype=np.int32)
+    ghost_deg = np.zeros((n_parts, n_ghost), dtype=np.int32)
+    ghost_part = np.zeros((n_parts, n_ghost), dtype=np.int32)
+    ghost_slot = np.zeros((n_parts, n_ghost), dtype=np.int32)
+    ghost_is_l1 = np.zeros((n_parts, n_ghost), dtype=bool)
+    adj_cidx = np.full((n_parts, n_local, width), n_local + n_ghost, dtype=np.int32)
+    ghost_adj_cidx = (
+        np.full((n_parts, n_ghost, width), n_local + n_ghost, dtype=np.int32)
+        if second_layer
+        else None
+    )
+    ghost_adj_gid = (
+        np.full((n_parts, n_ghost, width), SENTINEL, dtype=np.int32)
+        if second_layer
+        else None
+    )
+
+    for p in range(n_parts):
+        l1, l2 = ghost_sets[p], ghost_l2_sets[p]
+        ghosts = np.concatenate([l1, l2]).astype(np.int64)
+        g = len(ghosts)
+        ghost_gid[p, :g] = ghosts.astype(np.int32)
+        if g:
+            ghost_deg[p, :g] = degrees[ghosts]
+            ghost_part[p, :g] = owner[ghosts]
+            ghost_slot[p, :g] = np.array([slot_of[int(x)] for x in ghosts], np.int32)
+        ghost_is_l1[p, : len(l1)] = True
+        # gid -> color-table index for this part.
+        cidx_of = np.full(n + 1, n_local + n_ghost, dtype=np.int32)
+        verts = part_verts[p]
+        cidx_of[verts] = np.arange(len(verts), dtype=np.int32)
+        if g:
+            cidx_of[ghosts] = n_local + np.arange(g, dtype=np.int32)
+        a = adj_gid[p]
+        adj_cidx[p] = np.where(a == SENTINEL, n_local + n_ghost, cidx_of[np.clip(a, 0, n)])
+        if second_layer and len(l1):
+            g_ell = to_ell(graph, width=width, rows=l1.astype(np.int64))
+            ghost_adj_gid[p, : len(l1)] = g_ell
+            ghost_adj_cidx[p, : len(l1)] = np.where(
+                g_ell == SENTINEL, n_local + n_ghost, cidx_of[np.clip(g_ell, 0, n)]
+            )
+
+    return PartitionedGraph(
+        n_global=n,
+        n_parts=n_parts,
+        n_local=n_local,
+        ell_width=width,
+        name=f"{graph.name}/p{n_parts}/{strategy}",
+        vertex_gid=vertex_gid,
+        deg=deg,
+        is_boundary=is_boundary,
+        adj_cidx=adj_cidx,
+        adj_gid=adj_gid,
+        ghost_gid=ghost_gid,
+        ghost_deg=ghost_deg,
+        ghost_part=ghost_part,
+        ghost_slot=ghost_slot,
+        ghost_is_l1=ghost_is_l1,
+        send_idx=send_idx,
+        send_mask=send_mask,
+        ghost_adj_cidx=ghost_adj_cidx,
+        ghost_adj_gid=ghost_adj_gid,
+    )

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the coloring hot spots.
+
+The paper's compute hot spots are KokkosKernels' ``VB_BIT`` /
+``NB_BIT`` loops and the conflict-detection sweep; these are the layers the
+paper optimizes on GPU, so they get TPU kernels here (DESIGN.md §2):
+
+* ``vb_bit``      -- windowed forbidden-bitmask color assignment
+* ``conflict``    -- Algorithm-4 conflict detection over ELL tiles
+* ``d2_forbidden``-- net-based two-hop forbidden-mask accumulation
+
+Each kernel ships ``<name>.py`` (``pl.pallas_call`` + ``BlockSpec``),
+a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``;
+``interpret=True`` executes the kernel body on CPU for validation.
+"""

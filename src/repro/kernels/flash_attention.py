@@ -1,0 +1,104 @@
+"""Flash-attention Pallas kernel — the §Perf cell-B structural fix.
+
+VMEM-resident online-softmax attention: per grid step one (head, q-tile)
+pair streams KV tiles through VMEM, so the (Lq, Lk) score matrix never
+touches HBM.  EXPERIMENTS.md §Perf cell B measures materialized attention
+at ~25% of the dense-train memory term; this kernel removes it on the TPU
+target (the CPU dry-run artifact cannot express VMEM residency, so the
+win is recorded analytically there).
+
+Layout: q/k/v collapsed to (B·H, L, dh); the GQA mapping (q head →
+kv head) is folded into the kv BlockSpec index maps, so no repeated-K is
+ever materialized.  fp32 running max / sum / accumulator; bf16 tile IO.
+
+VMEM working set per grid step (bq=block_q, bk=block_k):
+  q tile bq×dh + kv tiles 2×bk×dh + acc bq×dh(f32) + scores bq×bk(f32)
+  = (128·128 + 2·128·128 + 128·128·2 + 128·128) × 4B ≈ 0.4 MB  « 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(causal: bool, scale: float, block_k: int, seq_k: int,
+                  q_ref, k_ref, v_ref, o_ref):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+    bq = q.shape[0]
+    nk = seq_k // block_k
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, q.shape[1]), jnp.float32)
+
+    def body(t, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], t * block_k, block_k).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], t * block_k, block_k).astype(jnp.float32)
+        s = q @ k.T                                     # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
+            k_pos = t * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(k_pos[None, :] <= q_pos[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, Lq, Hq, dh)
+    k: jnp.ndarray,   # (B, Lk, Hkv, dh)
+    v: jnp.ndarray,   # (B, Lk, Hkv, dh)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused GQA attention. Returns (B, Lq, Hq, dh)."""
+    b, lq, hq, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, "pad seq to block size"
+    scale = dh ** -0.5
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, lq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, lk, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, lk, dh)
+
+    def kv_index(i, j):
+        # grid axis 0 walks (b, h_q); map to the owning kv head row.
+        return (i // hq * hkv + (i % hq) // g, 0, 0)
+
+    kernel = functools.partial(_flash_kernel, causal, scale, block_k, lk)
+    of = pl.pallas_call(
+        kernel,
+        grid=(b * hq, lq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, lk, dh), kv_index),
+            pl.BlockSpec((1, lk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return of.reshape(b, hq, lq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,96 @@
+"""Jit'd wrappers composing the Pallas kernels into full coloring rounds.
+
+``local_color_d1_pallas`` is a drop-in replacement for
+``repro.core.local.local_color_d1`` built from the kernels: assignment
+(vb_bit) + speculative-collision resolution (conflict kernel applied with
+``all_pairs=True`` masking semantics via the wrapper) iterated to a fixed
+point.  The distributed runtime can select it with ``use_kernels=True``
+(interpret mode on CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conflict import v_loses
+from repro.core.local import pick_color
+from repro.kernels.conflict import conflict_detect
+from repro.kernels.d2_forbidden import d2_forbidden
+from repro.kernels.vb_bit import vb_bit_assign
+
+__all__ = [
+    "vb_bit_assign",
+    "conflict_detect",
+    "d2_forbidden",
+    "local_color_d1_pallas",
+    "d2_assign_pallas",
+]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("recolor_degrees", "max_iters", "interpret", "tile")
+)
+def local_color_d1_pallas(
+    adj_cidx, color_tab, active, deg_tab, gid_tab, *,
+    recolor_degrees: bool = True, max_iters: int = 96,
+    interpret: bool = True, tile: int = 256,
+):
+    """Kernel-backed distance-1 local coloring (same contract as core.local)."""
+    n_loc = active.shape[0]
+    base0 = jnp.ones((n_loc,), jnp.int32) + 0 * color_tab[:n_loc]
+    deg_loc = deg_tab[:n_loc]
+    gid_loc = gid_tab[:n_loc]
+
+    def cond(st):
+        tab, base, it = st
+        return (it < max_iters) & jnp.any(active & (tab[:n_loc] == 0))
+
+    def body(st):
+        tab, base, it = st
+        colors, base = vb_bit_assign(
+            adj_cidx, tab[:n_loc], base, active, tab,
+            tile=tile, interpret=interpret,
+        )
+        tab = tab.at[:n_loc].set(colors)
+        # Intra-tile speculative collisions: Alg-4 rule over ALL neighbors
+        # (not only ghosts), reusing the jnp rule — the conflict kernel's
+        # ghost-scoped variant is exercised by the distributed detect path.
+        co = tab[adj_cidx]
+        do = deg_tab[adj_cidx]
+        go = gid_tab[adj_cidx]
+        lose = v_loses(colors[:, None], co, deg_loc[:, None], do,
+                       gid_loc[:, None], go,
+                       recolor_degrees=recolor_degrees).any(axis=1)
+        tab = tab.at[:n_loc].set(jnp.where(active & lose, 0, colors))
+        return tab, base, it + 1
+
+    color_tab, _, _ = jax.lax.while_loop(cond, body, (color_tab, base0, jnp.int32(0)))
+    return color_tab
+
+
+@functools.partial(
+    jax.jit, static_argnames=("partial_d2", "interpret", "tile")
+)
+def d2_assign_pallas(
+    adj_cidx, ext_adj_cidx, color_tab, base, active, *,
+    partial_d2: bool = False, interpret: bool = True, tile: int = 128,
+):
+    """One D2 assignment step: two-hop forbidden kernel + lowest-bit pick."""
+    n_loc = active.shape[0]
+    colors = color_tab[:n_loc]
+    forbidden = d2_forbidden(
+        adj_cidx, base, active, colors, color_tab, ext_adj_cidx,
+        partial_d2=partial_d2, tile=tile, interpret=interpret,
+    )
+    uncolored = active & (colors == 0)
+    base_eff = jnp.where(uncolored, base, 1)
+    cand, ok = pick_color(forbidden, base_eff)
+    new_colors = jnp.where(uncolored & ok, cand, colors)
+    new_base = jnp.where(uncolored & ~ok, base + 32, base)
+    return new_colors, new_base
+
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+
+__all__.append("flash_attention")

@@ -1,0 +1,118 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each runnable cell this produces, with zero device allocation:
+  * ``compiled = jax.jit(step, in_shardings=...).lower(*sds).compile()``
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM
+  * ``compiled.cost_analysis()``   — FLOPs/bytes for §Roofline
+  * collective byte counts parsed from the optimized HLO (roofline/)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--all] [--out results.json]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import step_and_specs
+from repro.models.sharding import use_policy
+from repro.roofline.analysis import analyze_compiled
+
+
+def run_cell(arch: str, shape: str, mesh, *, verbose: bool = True,
+             cfg=None) -> dict:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md."""
+    t0 = time.time()
+    fn, sds, shardings, policy = step_and_specs(arch, shape, mesh, cfg=cfg)
+    with use_policy(policy):
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*sds)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+    }
+    if mem is not None:
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                record[k] = int(v)
+    record.update(analyze_compiled(compiled, cfg, spec, mesh))
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {record['mesh']}: OK "
+              f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: "
+              f"{ {k: v for k, v in record.items() if 'bytes' in k} }")
+        print(f"  cost_analysis: flops={record['flops']:.3e} "
+              f"bytes={record['bytes_accessed']:.3e}")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    records = []
+    for arch, shape, skip in cells(args.arch):
+        if args.shape and shape != args.shape:
+            continue
+        if skip:
+            rec = {"arch": arch, "shape": shape, "status": "skip", "reason": skip}
+            print(f"[dryrun] {arch} × {shape}: SKIP ({skip})")
+            records.append(rec)
+            continue
+        for mesh in meshes:
+            try:
+                records.append(run_cell(arch, shape, mesh))
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                records.append({
+                    "arch": arch, "shape": shape,
+                    "mesh": "x".join(map(str, mesh.devices.shape)),
+                    "status": "fail", "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    n_fail = sum(r["status"] == "fail" for r in records)
+    print(f"[dryrun] {len(records)} records, {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

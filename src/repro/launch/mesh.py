@@ -1,0 +1,24 @@
+"""Production mesh construction (task-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests, small runs)."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes present in a mesh ('pod' + 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every dry-run cell.
+
+``step_and_specs(arch, shape, mesh)`` returns (fn, args_sds, in_shardings)
+ready for ``jax.jit(fn, in_shardings=...).lower(*args_sds)`` — weak-type
+correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import dp_axes
+from repro.models.config import ModelConfig
+from repro.models.sharding import (
+    make_activation_policy,
+    params_sharding_tree,
+    use_policy,
+)
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def params_specs(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(init_params, cfg), key)
+
+
+def opt_specs(params_sds):
+    return jax.eval_shape(init_opt_state, params_sds)
+
+
+def _batch_axis_spec(mesh, global_batch: int):
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return dp if global_batch % dp_size == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh):
+    """(batch_sds, batch_shardings) for a train/prefill batch."""
+    spec = SHAPES[shape_name]
+    b, l = spec.global_batch, spec.seq_len
+    dp = _batch_axis_spec(mesh, b)
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds: dict = {"labels": jax.ShapeDtypeStruct((b, l), i32)}
+    shd: dict = {"labels": NamedSharding(mesh, P(dp, None))}
+    if cfg.frontend_dim:
+        sds["tokens"] = None
+        shd["tokens"] = None
+        sds["frames"] = jax.ShapeDtypeStruct((b, l, cfg.frontend_dim), f32)
+        shd["frames"] = NamedSharding(mesh, P(dp, None, None))
+    else:
+        sds["tokens"] = jax.ShapeDtypeStruct((b, l), i32)
+        shd["tokens"] = NamedSharding(mesh, P(dp, None))
+    if cfg.n_cross_layers:
+        sds["img"] = jax.ShapeDtypeStruct((b, cfg.vision_seq, cfg.d_model), f32)
+        shd["img"] = NamedSharding(mesh, P(dp, None, None))
+    return sds, shd
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str, mesh):
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    # NB: bind b/s in the closure — eval_shape args would become tracers
+    # and tracers cannot appear in jnp.zeros shapes.
+    sds = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    dp = _batch_axis_spec(mesh, b)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def shard_one(path, leaf):
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p) for p in path)
+        if name in ("k", "v"):
+            # (L, B, S, Hkv, dh): sequence on model (context-parallel).
+            seq = leaf.shape[2]
+            tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+            tp_ok = tp if seq % max(tp_size, 1) == 0 else None
+            return NamedSharding(mesh, P(None, dp, tp_ok, None, None))
+        if name.startswith("cross_"):
+            return NamedSharding(mesh, P(None, dp, None, None, None))
+        if name == "ssm/s":
+            tp_ok = tp if cfg.shard_ssm_heads else None
+            return NamedSharding(mesh, P(None, dp, tp_ok, None, None))
+        if name == "ssm/conv":
+            return NamedSharding(mesh, P(None, dp, None, None))
+        return NamedSharding(mesh, P())  # length scalar
+    shardings = jax.tree_util.tree_map_with_path(shard_one, sds)
+    return sds, shardings
+
+
+def step_and_specs(arch: str, shape_name: str, mesh, *,
+                   opt_cfg: OptimizerConfig | None = None, cfg=None):
+    """Build (fn, args_sds, in_shardings, policy) for one dry-run cell.
+
+    ``cfg`` overrides the registry config (hillclimb variants: remat
+    policy, chunk sizes, moe_impl — EXPERIMENTS.md §Perf).
+    """
+    cfg = cfg or get_config(arch)
+    spec = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    policy = make_activation_policy(mesh, cfg, dp=dp)
+    # Respect batch divisibility in activation constraints too.
+    bspec = _batch_axis_spec(mesh, spec.global_batch)
+    if bspec is None:
+        pol_specs = dict(policy.specs)
+        pol_specs["tokens"] = P(None, None)
+        pol_specs["residual"] = P(None, "model", None)
+        pol_specs["logits"] = P(None, None, "model")
+        pol_specs["kv_cache"] = P(None, None, "model", None, None)
+        pol_specs["ssm_state"] = P(None, None, "model" if cfg.shard_ssm_heads else None,
+                                   None, None)
+        policy = type(policy)(specs=pol_specs, mesh=mesh)
+
+    p_sds = params_specs(cfg)
+    p_shd = params_sharding_tree(p_sds, cfg, mesh, dp=dp)
+
+    if spec.kind == "train":
+        opt_cfg = opt_cfg or OptimizerConfig()
+        o_sds = opt_specs(p_sds)
+        o_shd = jax.tree.map(
+            lambda s: s, {"m": p_shd, "v": p_shd,
+                          "step": NamedSharding(mesh, P())})
+        b_sds, b_shd = batch_specs(cfg, shape_name, mesh)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, batch), has_aux=True)(params)
+            params, opt_state, om = adamw_update(params, opt_state, grads, opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+
+        return train_step, (p_sds, o_sds, b_sds), (p_shd, o_shd, b_shd), policy
+
+    if spec.kind == "prefill":
+        b_sds, b_shd = batch_specs(cfg, shape_name, mesh)
+        if not cfg.causal:
+            # Encoder: "prefill" is the full forward (no cache).
+            def encode(params, batch):
+                return forward(params, cfg, batch["tokens"],
+                               img=batch.get("img"), frames=batch.get("frames"))
+            return encode, (p_sds, b_sds), (p_shd, b_shd), policy
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch["tokens"], img=batch.get("img"),
+                           frames=batch.get("frames"))
+
+        return prefill_step, (p_sds, b_sds), (p_shd, b_shd), policy
+
+    # decode
+    c_sds, c_shd = cache_specs(cfg, shape_name, mesh)
+    b = spec.global_batch
+    t_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    t_shd = NamedSharding(mesh, P(_batch_axis_spec(mesh, b), None))
+
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, token, cache)
+
+    return serve_step, (p_sds, t_sds, c_sds), (p_shd, t_shd, c_shd), policy

@@ -1,0 +1,155 @@
+"""End-to-end training driver: data → step → checkpoint/restart → watchdog.
+
+Runs real training for small configs on CPU (examples/train_lm.py) and is
+the deployment shape for TPU: sharded params/optimizer via the same rules
+the dry-run validates, async checkpoints off the step path, straggler
+watchdog with roll-back-and-restart, deterministic data skip.
+
+Usage (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+      --smoke --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, get_config, get_smoke
+from repro.data.pipeline import SyntheticLMData
+from repro.launch.mesh import dp_axes, make_mesh
+from repro.models.sharding import (
+    make_activation_policy,
+    params_sharding_tree,
+    use_policy,
+)
+from repro.models.transformer import init_params
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.step import make_train_step
+from repro.train.watchdog import Watchdog
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    mesh=None,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    seed: int = 0,
+    log_every: int = 10,
+    fail_at_step: int | None = None,   # fault-injection hook (tests)
+):
+    """Returns (params, metrics_history). Restartable from ckpt_dir."""
+    opt_cfg = OptimizerConfig(total_steps=max(steps, 2), warmup_steps=max(steps // 10, 1))
+    step_fn = make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                              compress_grads=compress_grads)
+
+    data = SyntheticLMData(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch,
+        seed=seed, frontend_dim=cfg.frontend_dim,
+        vision_seq=cfg.vision_seq if cfg.n_cross_layers else 0,
+        d_model=cfg.d_model)
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    opt_state = init_opt_state(params)
+    comp_state = None
+    if compress_grads:
+        from repro.train import compression
+        comp_state = compression.init_state(params)
+
+    policy = None
+    if mesh is not None:
+        policy = make_activation_policy(mesh, cfg, dp=dp_axes(mesh))
+        shardings = params_sharding_tree(params, cfg, mesh, dp=dp_axes(mesh))
+        params = jax.tree.map(jax.device_put, params, shardings)
+        opt_state = {
+            "m": jax.tree.map(jax.device_put, opt_state["m"], shardings),
+            "v": jax.tree.map(jax.device_put, opt_state["v"], shardings),
+            "step": opt_state["step"],
+        }
+
+    start = 0
+    if ckpt_dir:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            state_tree = {"params": params, "opt": opt_state}
+            restored, extra = ckpt.restore(ckpt_dir, last, state_tree)
+            params, opt_state = restored["params"], restored["opt"]
+            start = int(extra.get("step", last))
+            print(f"[train] restored step {start} from {ckpt_dir}")
+
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    writer = ckpt.AsyncCheckpointer()
+    wd = Watchdog()
+    history = []
+
+    with use_policy(policy):
+        for step in range(start, steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = {k: (jnp.asarray(v) if v is not None else None)
+                     for k, v in data.batch_at(step).items()}
+            wd.start_step()
+            if compress_grads:
+                params, opt_state, comp_state, metrics = jitted(
+                    params, opt_state, batch, comp_state)
+            else:
+                params, opt_state, metrics = jitted(params, opt_state, batch)
+            stats = wd.end_step()
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics.update(step=step, **{k: v for k, v in stats.items() if k != "slow"})
+            history.append(metrics)
+            if step % log_every == 0:
+                print(f"[train] step {step} loss {metrics['loss']:.4f} "
+                      f"({stats['step_time']*1e3:.0f} ms)")
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                writer.save(ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            extra={"step": step + 1})
+    writer.wait()
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state},
+                  extra={"step": steps})
+    return params, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2x2:data,model' (needs that many devices)")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        shape_s, axes_s = args.mesh.split(":")
+        mesh = make_mesh(tuple(map(int, shape_s.split("x"))),
+                         tuple(axes_s.split(",")))
+    _, history = train_loop(
+        cfg, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, ckpt_dir=args.ckpt_dir, mesh=mesh,
+        microbatches=args.microbatches, compress_grads=args.compress_grads)
+    print(f"[train] done: final loss {history[-1]['loss']:.4f} "
+          f"(start {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers).
+
+One generic decoder/encoder LM assembled from :class:`ModelConfig` covers
+the 10 assigned architectures: dense GQA transformers, MoE (expert- or
+tensor-sharded), Mamba-2 SSD, Hymba-style hybrid attn‖SSM, VLM cross-attn
+injection, and the HuBERT-style encoder.  Modality frontends are stubs per
+the task spec: ``input_specs`` provides precomputed frame/patch embeddings.
+"""
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params, forward, prefill, decode_step
+
+__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step"]

@@ -1,0 +1,285 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, gated MLP.
+
+Attention has three execution shapes:
+  * dense   — materialized scores (short sequences);
+  * chunked — flash-style double scan (outer Q chunks, inner online-softmax
+    KV chunks) for long prefill: activation memory is O(q_chunk × k_chunk)
+    instead of O(L²), which is what keeps the 32k/500k dry-run cells inside
+    HBM;
+  * decode  — single query against a cache.
+
+All weights are plain pytrees; layer stacks carry a leading layer axis and
+are consumed by ``lax.scan`` (small HLO, fast 512-device compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x: (..., L, H, dh), positions: (..., L)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., L, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int) -> jnp.ndarray:
+    """(Lq, Lk) additive mask bias."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+GQA_REPEAT = False  # repeat-kv formulation (vs grouped-reshape): §Perf cell B
+SCORES_FP32 = True   # fp32 score/softmax materialization (vs bf16): §Perf cell B
+ATTN_CUSTOM_VJP = False  # bf16-backward custom VJP variant: §Perf cell B
+_SCORE_PREF = lambda: jnp.float32 if SCORES_FP32 else None  # noqa: E731
+
+
+def _gqa_scores(q, k):
+    """q: (B, Lq, Hq, dh), k: (B, Lk, Hkv, dh) -> (B, Hq, Lq, Lk) fp32.
+
+    Two equivalent formulations, selectable for the §Perf study:
+    broadcast-repeat of kv heads to the q-head count (keeps the head axis
+    cleanly shardable) vs the (hkv, group) reshape of q (fewer materialized
+    bytes when kv is replicated).
+    """
+    b, lq, hq, dh = q.shape
+    hkv = k.shape[2]
+    if GQA_REPEAT:
+        if hkv != hq:
+            k = jnp.repeat(k, hq // hkv, axis=2)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                       preferred_element_type=_SCORE_PREF())
+        return s * (dh ** -0.5)
+    q = q.reshape(b, lq, hkv, hq // hkv, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=_SCORE_PREF())
+    return s.reshape(b, hq, lq, k.shape[1]) * (dh ** -0.5)
+
+
+def _gqa_out(p, v):
+    """p: (B, Hq, Lq, Lk) fp32, v: (B, Lk, Hkv, dh) -> (B, Lq, Hq, dh)."""
+    b, hq, lq, lk = p.shape
+    hkv = v.shape[2]
+    if GQA_REPEAT:
+        if hkv != hq:
+            v = jnp.repeat(v, hq // hkv, axis=2)
+        return jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+    p = p.reshape(b, hkv, hq // hkv, lq, lk)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, lq, hq, v.shape[3])
+
+
+def attention_dense(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0):
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    if ATTN_CUSTOM_VJP:
+        return _attn_core(q, k, v, bias)
+    s = _gqa_scores(q, k) + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+@jax.custom_vjp
+def _attn_core(q, k, v, bias):
+    """Attention forward with a bf16-tensor backward.
+
+    Without this, the fp32 ``preferred_element_type`` on the score dot
+    makes every backward tensor fp32, and those are what the SPMD
+    partitioner reshards — doubling the collective and memory terms
+    (§Perf cell B, iteration 4).  The custom VJP keeps softmax math in
+    fp32 but casts every *materialized* backward operand to bf16; fp32
+    accumulation still happens inside the dots.
+    """
+    s = _gqa_scores(q, k) + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def _attn_core_fwd(q, k, v, bias):
+    s = _gqa_scores(q, k) + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, v)
+    return o, (q, k, v, p.astype(q.dtype))
+
+
+def _attn_core_bwd(res, do):
+    q, k, v, p16 = res
+    hq, dh = q.shape[2], q.shape[3]
+    hkv = k.shape[2]
+    g = hq // hkv
+    do16 = do.astype(q.dtype)
+    k_rep = jnp.repeat(k, g, axis=2) if g > 1 else k
+    v_rep = jnp.repeat(v, g, axis=2) if g > 1 else v
+    # dv: (B, S, Hq, dh) then group-sum to kv heads (local, no reshard).
+    dv_full = jnp.einsum("bhqs,bqhd->bshd", p16, do16)
+    dp = jnp.einsum("bqhd,bshd->bhqs", do16, v_rep,
+                    preferred_element_type=jnp.float32)
+    p32 = p16.astype(jnp.float32)
+    ds = p32 * (dp - (dp * p32).sum(-1, keepdims=True))
+    ds16 = (ds * (dh ** -0.5)).astype(q.dtype)
+    dq = jnp.einsum("bhqs,bshd->bqhd", ds16, k_rep)
+    dk_full = jnp.einsum("bhqs,bqhd->bshd", ds16, q)
+
+    def fold(full):
+        if g == 1:
+            return full
+        b, s_len = full.shape[0], full.shape[1]
+        return full.reshape(b, s_len, hkv, g, dh).sum(3)
+
+    return dq, fold(dk_full), fold(dv_full), None
+
+
+_attn_core.defvjp(_attn_core_fwd, _attn_core_bwd)
+
+
+def attention_chunked(q, k, v, q_pos, k_pos, *, causal: bool, window: int = 0,
+                      q_chunk: int = 4096, k_chunk: int = 1024):
+    """Flash-style attention: outer scan over Q chunks, inner online-softmax
+    scan over KV chunks.  Exact (fp32 accumulators)."""
+    b, lq, hq, dh = q.shape
+    lk = k.shape[1]
+    q_chunk = min(q_chunk, lq)
+    k_chunk = min(k_chunk, lk)
+    nq, nk = lq // q_chunk, lk // k_chunk
+    assert lq % q_chunk == 0 and lk % k_chunk == 0, "pad sequence to chunk size"
+
+    qs = q.reshape(b, nq, q_chunk, hq, dh).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    ks = k.reshape(b, nk, k_chunk, k.shape[2], dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, k_chunk, v.shape[2], dh).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, k_chunk)
+
+    def q_step(_, qc):
+        qi, qpi = qc
+
+        def kv_step(carry, kc):
+            m, l, acc = carry
+            ki, vi, kpi = kc
+            s = _gqa_scores(qi, ki) + _mask_bias(qpi, kpi, causal=causal, window=window)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + _gqa_out(p, vi).astype(jnp.float32).transpose(0, 2, 1, 3)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, qc, Hq, dh)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, lq, hq, dh)
+
+
+def attention_decode(q, k_cache, v_cache, length, *, window: int = 0):
+    """q: (B, 1, Hq, dh) vs cache (B, S, Hkv, dh).
+
+    The current token's k/v must already be written at ``length - 1``;
+    positions ``< length`` are attended (minus the sliding window).
+    """
+    s = _gqa_scores(q, k_cache)                        # (B, Hq, 1, S)
+    k_pos = jnp.arange(k_cache.shape[1])
+    ok = k_pos < length
+    if window:
+        ok &= k_pos > length - 1 - window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Parameterized modules (init + apply as plain functions over pytrees).
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, *, layers: int) -> Params:
+    d, dh, hq, hkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (layers, d, hq * dh), dt) * scale,
+        "wk": jax.random.normal(k2, (layers, d, hkv * dh), dt) * scale,
+        "wv": jax.random.normal(k3, (layers, d, hkv * dh), dt) * scale,
+        "wo": jax.random.normal(k4, (layers, hq * dh, d), dt) * scale,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((layers, hq * dh), dt)
+        p["bk"] = jnp.zeros((layers, hkv * dh), dt)
+        p["bv"] = jnp.zeros((layers, hkv * dh), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((layers, dh), dt)
+        p["k_norm"] = jnp.ones((layers, dh), dt)
+    return p
+
+
+def qkv_project(p, x, cfg, positions, *, rope_on: bool = True):
+    """x: (B, L, D) -> q (B,L,Hq,dh), k/v (B,L,Hkv,dh) with RoPE + qk-norm."""
+    b, l, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, l, hq, dh)
+    k = k.reshape(b, l, hkv, dh)
+    v = v.reshape(b, l, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    from repro.models.sharding import shard_activation
+    q = shard_activation(q, "attn_q")
+    k = shard_activation(k, "attn_kv")
+    v = shard_activation(v, "attn_kv")
+    return q, k, v
+
+
+def init_mlp(key, cfg, *, layers: int) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wi": jax.random.normal(k1, (layers, d, f), dt) * d ** -0.5,
+        "wo": jax.random.normal(k3, (layers, f, d), dt) * f ** -0.5,
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = jax.random.normal(k2, (layers, d, f), dt) * d ** -0.5
+    return p
+
+
+def mlp_apply(p, x, cfg):
+    h = x @ p["wi"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]

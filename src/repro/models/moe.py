@@ -1,0 +1,185 @@
+"""Mixture-of-Experts layer: top-k router + capacity dispatch (+EP).
+
+Capacity-based dispatch in the GShard/Switch style, expressed so GSPMD
+turns the expert axis resharding into an all-to-all when experts are
+sharded on the ``model`` axis (``moe_shard="expert"``, qwen3-moe) or a
+tensor-parallel expert GEMM when experts are replicated and ``d_ff`` is
+sharded (``moe_shard="tensor"``, grok-1's 8 experts < 16-way TP).
+
+Beyond-paper tie-in (DESIGN.md §Arch-applicability): the expert↔device
+traffic matrix of this dispatch is the conflict graph that
+``examples/moe_a2a_schedule.py`` colors with the paper's D1 to derive
+contention-free all-to-all phases.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params
+
+
+def moe_apply_shard_map(p, x, cfg, policy):
+    """Expert layer with *explicit* distribution (§Perf cells A and C).
+
+    The GSPMD lowering of the capacity scatter replicates dispatch buffers
+    across the mesh (measured: 64s collective term on qwen3-moe train_4k —
+    50× the useful a2a volume).  Under shard_map every index operation is
+    provably device-local and the only wire traffic is:
+
+      expert-sharded (cell A): one all_to_all of the (E, C_loc, D) dispatch
+        buffer out and one back — the algorithmic minimum (k·D per token
+        ×capacity slack);
+      tensor-sharded (cell C): no dispatch traffic at all; one psum of the
+        combined (T_loc, D) output (partial sums over the d_ff shards).
+
+    Differentiable (all_to_all/psum have transposes); aux losses are
+    pmean'd across the mesh.
+    """
+    mesh = policy.mesh
+    axis_names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axis_names)
+    tp = "model"
+    ntp = dict(zip(axis_names, mesh.devices.shape))[tp]
+    e, k = cfg.n_experts, cfg.experts_per_token
+    d = x.shape[-1]
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(wr, wi, wg, wo, xl):
+        b_loc, l_loc, _ = xl.shape
+        t = b_loc * l_loc
+        xt = xl.reshape(t, d)
+        logits = xt.astype(jnp.float32) @ wr
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+        capacity = min(max(int(t * k * cfg.capacity_factor / e), 4), t)
+
+        onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)
+        flat = onehot.reshape(t * k, e)
+        pos = ((jnp.cumsum(flat, axis=0) - flat) * flat).sum(-1).reshape(t, k)
+        fits = pos < capacity
+        slot = jnp.where(fits, expert_ids * capacity + pos, e * capacity)
+        disp = jnp.zeros((e * capacity + 1, d), xl.dtype)
+        disp = disp.at[slot.reshape(-1)].add(
+            jnp.repeat(xt, k, axis=0).reshape(t * k, d))
+        disp = disp[:-1].reshape(e, capacity, d)
+
+        if cfg.moe_shard == "expert":
+            # (E, C, D) -> (E/ntp, C*ntp, D): tokens travel to their experts.
+            disp = jax.lax.all_to_all(disp, tp, split_axis=0, concat_axis=1,
+                                      tiled=True)
+            h = jnp.einsum("ecd,edf->ecf", disp, wi)
+            g = jnp.einsum("ecd,edf->ecf", disp, wg)
+            out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)
+            out = jax.lax.all_to_all(out, tp, split_axis=1, concat_axis=0,
+                                     tiled=True)           # back to (E, C, D)
+        else:
+            # Experts replicated, d_ff sharded: compute local partial sums.
+            h = jnp.einsum("ecd,edf->ecf", disp, wi)
+            g = jnp.einsum("ecd,edf->ecf", disp, wg)
+            out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)
+
+        out_flat = jnp.concatenate(
+            [out.reshape(e * capacity, d), jnp.zeros((1, d), out.dtype)])
+        tok_out = out_flat[slot]
+        combined = (tok_out * gate_vals[..., None].astype(out.dtype)).sum(axis=1)
+        if cfg.moe_shard != "expert":
+            combined = jax.lax.psum(combined, tp)  # join d_ff partial sums
+
+        density = onehot.astype(jnp.float32).sum(1).mean(0)
+        lb = e * (density * probs.mean(0)).sum()
+        z = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+        aux = cfg.router_lb_coef * lb + cfg.router_z_coef * z
+        aux = jax.lax.pmean(aux, dp + (tp,))
+        return combined.reshape(b_loc, l_loc, d), aux
+
+    if cfg.moe_shard == "expert":
+        wi_spec = wg_spec = P(tp, None, None)
+        wo_spec = P(tp, None, None)
+    else:
+        wi_spec = wg_spec = P(None, None, tp)
+        wo_spec = P(None, tp, None)
+
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(None, None), wi_spec, wg_spec, wo_spec, P(dp, tp, None)),
+        out_specs=(P(dp, tp, None), P()),
+    )(p["router"], p["wi"], p["wg"], p["wo"], x)
+    return out, {"moe": aux}
+
+
+def init_moe(key, cfg, *, layers: int) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "router": jax.random.normal(k1, (layers, d, e), jnp.float32) * d ** -0.5,
+        "wi": jax.random.normal(k2, (layers, e, d, f), dt) * d ** -0.5,
+        "wg": jax.random.normal(k3, (layers, e, d, f), dt) * d ** -0.5,
+        "wo": jax.random.normal(k4, (layers, e, f, d), dt) * f ** -0.5,
+    }
+
+
+def moe_apply(p, x, cfg, *, dropless: bool = False):
+    """x: (B, L, D) -> (B, L, D), aux_losses dict.
+
+    Top-k routing with per-expert capacity; overflowing tokens are dropped
+    (their expert contribution is zero — standard capacity semantics).
+    ``dropless=True`` sizes capacity to the worst case (decode steps, where
+    dropping the only token would zero the MoE contribution).
+    """
+    b, l, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * l
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if dropless:
+        capacity = t
+    else:
+        capacity = min(max(int(t * k * cfg.capacity_factor / e), 4), t)
+
+    # Position of each (token, slot) within its expert queue.
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)    # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)          # (T*k, E)
+    pos = (pos_in_expert * flat).sum(-1).reshape(t, k)         # (T, k)
+    fits = pos < capacity
+
+    # Dispatch: scatter tokens into (E, C, D) buffers.
+    slot = jnp.where(fits, expert_ids * capacity + pos, e * capacity)  # overflow slot
+    disp = jnp.zeros((e * capacity + 1, d), x.dtype)
+    disp = disp.at[slot.reshape(-1)].add(
+        jnp.repeat(xt, k, axis=0).reshape(t * k, d)
+    )
+    disp = disp[:-1].reshape(e, capacity, d)
+
+    # Expert FFN (batched GEMM over the expert axis).
+    h = jnp.einsum("ecd,edf->ecf", disp, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", disp, p["wg"])
+    h = jax.nn.silu(g) * h
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])               # (E, C, D)
+
+    # Combine: gather each (token, slot)'s expert output, weighted.
+    out_flat = jnp.concatenate(
+        [out.reshape(e * capacity, d), jnp.zeros((1, d), out.dtype)]
+    )
+    tok_out = out_flat[slot]                                   # (T, k, D)
+    combined = (tok_out * gate_vals[..., None].astype(out.dtype)).sum(axis=1)
+
+    # Aux losses: Switch load-balance + router z-loss.
+    density = onehot.astype(jnp.float32).sum(1).mean(0)        # (E,) token frac
+    router_prob = probs.mean(0)
+    lb_loss = e * (density * router_prob).sum()
+    z_loss = jnp.square(jax.nn.logsumexp(logits, axis=-1)).mean()
+    aux = {
+        "moe_lb": cfg.router_lb_coef * lb_loss,
+        "moe_z": cfg.router_z_coef * z_loss,
+    }
+    return combined.reshape(b, l, d), aux

@@ -1,0 +1,201 @@
+"""Logical-axis sharding rules and the activation-constraint hook.
+
+Model code stays sharding-agnostic; the launch layer installs an
+:class:`ActivationPolicy` (PartitionSpecs per activation kind) and a
+parameter-rule table.  ``shard_activation(x, kind)`` is a no-op unless a
+policy is active, so smoke tests and single-device runs never see mesh
+machinery.
+
+Parameter rules (Megatron/FSDP hybrid — DESIGN.md §5):
+  weights   (.., D_in, D_out)-like: TP shards the "wide" axis on ``model``,
+  FSDP shards the other on ``(pod?, data)``.
+  experts   expert-sharded: E on ``model``; tensor-sharded: d_ff on ``model``.
+  caches    KV sequence axis on ``model`` (context-parallel decode: works
+  for every GQA width, incl. kv_heads < |model| — DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ctx = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationPolicy:
+    """PartitionSpec per activation kind; None entries = unconstrained."""
+
+    specs: dict[str, P]
+    mesh: Any = None
+
+    def spec(self, kind: str) -> P | None:
+        return self.specs.get(kind)
+
+
+def set_policy(policy: ActivationPolicy | None) -> None:
+    _ctx.policy = policy
+
+
+def get_policy() -> ActivationPolicy | None:
+    return getattr(_ctx, "policy", None)
+
+
+class use_policy:
+    def __init__(self, policy: ActivationPolicy | None):
+        self.policy = policy
+
+    def __enter__(self):
+        self.prev = get_policy()
+        set_policy(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        set_policy(self.prev)
+
+
+def shard_activation(x, kind: str):
+    pol = get_policy()
+    if pol is None:
+        return x
+    spec = pol.spec(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(pol.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules.
+# ---------------------------------------------------------------------------
+
+def make_activation_policy(mesh, cfg, *, dp=("data",), tp="model") -> ActivationPolicy:
+    """Default activation constraints for a (pod?, data, model) mesh."""
+    dp = tuple(a for a in dp if a in mesh.axis_names)
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(tp, 1)
+    specs = {
+        "tokens": P(dp, None),
+        # Residual stream: batch on dp, sequence on tp (sequence parallelism
+        # — keeps the saved scan carries 1/|model| of full size).
+        "residual": P(dp, tp, None),
+        # Block-internal compute: sequence gathered, head/ff dims sharded by
+        # the weights (Megatron-SP: one all-gather in, one reduce-scatter
+        # out per block section — §Perf cell B iteration 3).
+        "block_compute": P(dp, None, None),
+        # NOTE §Perf cell B: explicit attn operand constraints ("attn_q"/
+        # "attn_kv") and the Megatron-SP "block_compute" gather were both
+        # measured HARMFUL under this GSPMD version (iterations 3-6 in
+        # EXPERIMENTS.md); the default policy deliberately leaves attention
+        # sharding to the partitioner. The kinds remain available for
+        # variant studies via a custom policy.
+        "logits": P(dp, None, tp),
+        "moe_dispatch": P(tp, None, None),   # expert axis -> all-to-all
+        "kv_cache": P(None, dp, tp, None, None),  # (L, B, S, H, dh): S on tp
+        "ssm_state": P(None, dp, tp, None, None),  # (L, B, H, P, N): H on tp
+    }
+    return ActivationPolicy(specs=specs, mesh=mesh)
+
+
+def param_spec(path: tuple[str, ...], ndim: int, cfg, *, dp=("data",), tp="model",
+               tp_size: int = 16):
+    """PartitionSpec for a parameter identified by its pytree path."""
+    name = "/".join(path)
+    f = tuple(dp)  # fsdp axes
+
+    def pad(spec_tail):
+        """Left-pad with None for the stacked layer axis if present."""
+        return P(*([None] * (ndim - len(spec_tail)) + list(spec_tail)))
+
+    # Embeddings / head.
+    if name.endswith("embed"):
+        return P(tp, f)
+    if name.endswith("lm_head"):
+        return P(f, tp)
+    if name.endswith("frontend"):
+        return P(None, f)
+    # Norm scales / small vectors / biases.
+    if any(k in name for k in ("norm", "ln", "bias", "a_log", "d_skip", "dt_bias",
+                               "bq", "bk", "bv")):
+        return pad([f]) if ndim >= 1 else P()
+    # MoE.
+    if "moe" in name:
+        if name.endswith("router"):
+            return pad([f, None])
+        expert_sharded = cfg.moe_shard == "expert"
+        if name.endswith(("wi", "wg")):
+            return pad([tp, f, None]) if expert_sharded else pad([None, f, tp])
+        if name.endswith("wo"):
+            return pad([tp, None, f]) if expert_sharded else pad([None, tp, f])
+    # Attention.
+    if "attn" in name:
+        if not cfg.shard_attn_heads:
+            return pad([f, None]) if ndim >= 2 else pad([None])
+        if name.endswith(("wq", "wk", "wv")):
+            # kv heads may not divide |tp|: shard only q-side on tp.
+            if name.endswith("wq") or cfg.n_kv_heads % tp_size == 0:
+                return pad([f, tp])
+            return pad([f, None])
+        if name.endswith("wo"):
+            return pad([tp, f])
+    # SSM.
+    if "ssm" in name:
+        if not cfg.shard_ssm_heads:
+            return pad([f, None]) if ndim >= 2 else pad([None])
+        if name.endswith(("in_xz", "in_dt")):
+            return pad([f, tp])
+        if name.endswith(("in_b", "in_c")):
+            return pad([f, None])
+        if name.endswith("conv_x"):
+            return pad([None, tp])
+        if name.endswith(("conv_b", "conv_c")):
+            return pad([None, None])
+        if name.endswith("out"):
+            return pad([tp, f])
+    # Dense MLP.
+    if name.endswith(("wi", "wg")):
+        return pad([f, tp])
+    if name.endswith("wo"):
+        return pad([tp, f])
+    # Fallback: fully replicated.
+    return P(*([None] * ndim))
+
+
+def params_sharding_tree(params_shape, cfg, mesh, *, dp=("data",), tp="model"):
+    """NamedSharding tree matching a params (shape-)pytree."""
+    dp = tuple(a for a in dp if a in mesh.axis_names)
+
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = axis_size.get(tp, 1)
+
+    def _fit(spec, shape):
+        """Drop sharding on any dim the axes don't divide (e.g. vocab
+        50280 % 16, per-head vectors on a 32-way fsdp axis)."""
+        out = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            parts = 1
+            for a in axes:
+                parts *= axis_size.get(a, 1)
+            while axes and dim % parts != 0:
+                # Drop the leading (largest-granularity) axis and retry.
+                parts //= axis_size.get(axes[0], 1)
+                axes = axes[1:]
+            if not axes:
+                out.append(None)
+            else:
+                out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    def one(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        spec = param_spec(keys, len(leaf.shape), cfg, dp=dp, tp=tp, tp_size=tp_size)
+        return jax.sharding.NamedSharding(mesh, _fit(spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

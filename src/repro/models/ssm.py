@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked scan + recurrent decode.
+
+Follows the SSD formulation of Dao & Gu (arXiv:2405.21060): per head h a
+scalar decay ``a_t = exp(dt_t * A_h)``; state ``S`` of shape (P, N) updated
+as ``S_t = a_t S_{t-1} + dt_t x_t B_t^T``; output ``y_t = C_t S_t + D x_t``.
+
+Training uses the chunked dual form (within-chunk quadratic "attention" +
+cross-chunk state recurrence with a ``lax.scan`` over chunks) — the
+TPU-friendly shape: chunk-local einsums hit the MXU, the sequential part is
+O(L / chunk).  Decode keeps (conv_state, ssm_state) and is O(1) per token —
+this is what makes the ``long_500k`` cell feasible (DESIGN.md).
+
+TPU adaptation note: the fused CUDA kernel of the paper's reference
+implementation (warp-level scan) is replaced by the chunked einsum
+formulation; separate x/B/C short convs keep TP sharding clean
+(x channels on the model axis, B/C replicated — ngroups=1 semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, rms_norm
+
+
+def init_ssm(key, cfg, *, layers: int) -> Params:
+    d, di, n, h = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_xz": jax.random.normal(ks[0], (layers, d, 2 * di), dt) * d ** -0.5,
+        "in_b": jax.random.normal(ks[1], (layers, d, n), dt) * d ** -0.5,
+        "in_c": jax.random.normal(ks[2], (layers, d, n), dt) * d ** -0.5,
+        "in_dt": jax.random.normal(ks[3], (layers, d, h), dt) * d ** -0.5,
+        "conv_x": jax.random.normal(ks[4], (layers, cfg.ssm_conv, di), dt) * 0.1,
+        "conv_b": jax.random.normal(ks[5], (layers, cfg.ssm_conv, n), dt) * 0.1,
+        "conv_c": jax.random.normal(ks[6], (layers, cfg.ssm_conv, n), dt) * 0.1,
+        "a_log": jnp.zeros((layers, h), jnp.float32),
+        "d_skip": jnp.ones((layers, h), jnp.float32),
+        "dt_bias": jnp.zeros((layers, h), jnp.float32),
+        "norm": jnp.ones((layers, di), dt),
+        "out": jax.random.normal(ks[7], (layers, di, d), dt) * di ** -0.5,
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, L, C), w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def ssm_apply(p, x, cfg):
+    """Chunked SSD forward. x: (B, L, D) -> (B, L, D)."""
+    l_in = x.shape[1]
+    q = min(cfg.ssm_chunk, l_in)
+    if l_in % q:
+        # End-pad to a chunk multiple (causal: pads never affect real rows).
+        pad = q - l_in % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        return ssm_apply(p, x, cfg)[:, :l_in]
+    b, l, d = x.shape
+    di, n, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    nc = l // q
+
+    xz = x @ p["in_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)                        # (B, L, di)
+    bs = _causal_conv(x @ p["in_b"], p["conv_b"])            # (B, L, N)
+    cs = _causal_conv(x @ p["in_c"], p["conv_c"])            # (B, L, N)
+    xs = _causal_conv(xs, p["conv_x"])                       # (B, L, di)
+    dt = jax.nn.softplus(
+        (x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                        # (B, L, H)
+    a = -jnp.exp(p["a_log"])                                 # (H,) negative
+    dta = dt * a                                             # (B, L, H) log-decay
+
+    # Chunk views.
+    xh = xs.reshape(b, nc, q, h, hd)
+    bc = bs.reshape(b, nc, q, n)
+    cc = cs.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = dta.reshape(b, nc, q, h)
+    cums = jnp.cumsum(dac, axis=2)                           # (B, nc, Q, H)
+
+    # Within-chunk (diagonal) term: quadratic attention-like.
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]    # (B,nc,Q,Q,H) log decay i>=j
+    li = jnp.arange(q)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)             # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)           # (B,nc,Q,Q)
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,Q,S,H)
+    y_diag = jnp.einsum("bcqsh,bcshp->bcqhp", w.astype(xh.dtype), xh)
+
+    # Cross-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(cums[:, :, -1])                    # (B, nc, H) total decay
+    # State contribution of each chunk: sum_s exp(cum_last - cum_s) dt_s x_s B_s^T
+    rdec = jnp.exp(cums[:, :, -1:, :] - cums) * dtc          # (B,nc,Q,H)
+    state_c = jnp.einsum(
+        "bcqh,bcqhp,bcqn->bchpn", rdec.astype(xh.dtype), xh, bc
+    )                                                        # (B,nc,H,P,N)
+
+    def chunk_step(s_prev, inp):
+        dec, sc = inp                                        # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[..., None, None] + sc.astype(jnp.float32)
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    _, s_before = jax.lax.scan(
+        chunk_step,
+        s0,
+        (chunk_decay.transpose(1, 0, 2), state_c.transpose(1, 0, 2, 3, 4)),
+    )                                                        # (nc, B, H, P, N)
+    s_before = s_before.transpose(1, 0, 2, 3, 4)             # (B, nc, H, P, N)
+
+    # Off-diagonal output: y_off[t] = exp(cum_t) * C_t . S_chunk_start
+    into = jnp.exp(cums)                                     # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", cc, s_before.astype(cc.dtype), into.astype(cc.dtype)
+    )
+
+    y = (y_diag + y_off).reshape(b, l, h, hd)
+    y = y + xh.reshape(b, l, h, hd) * p["d_skip"][:, None].astype(y.dtype).reshape(1, 1, h, 1)
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out"]
+
+
+def ssm_decode(p, x, state, cfg):
+    """One-token recurrent step.
+
+    x: (B, 1, D); state = {"conv": (B, K-1, d_conv_channels), "s": (B,H,P,N)}.
+    Returns (y (B,1,D), new_state).
+    """
+    b = x.shape[0]
+    di, n, hd = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    k = cfg.ssm_conv
+
+    xz = x @ p["in_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)                        # (B, 1, di)
+    bs_in = x @ p["in_b"]
+    cs_in = x @ p["in_c"]
+    cat = jnp.concatenate([xs, bs_in, cs_in], axis=-1)       # (B, 1, di+2N)
+    conv_hist = jnp.concatenate([state["conv"], cat], axis=1)  # (B, K, C)
+    wcat = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_out = jax.nn.silu((conv_hist * wcat[None]).sum(axis=1, keepdims=True))
+    xs, bs, cs = jnp.split(conv_out, [di, di + n], axis=-1)
+    new_conv = conv_hist[:, 1:]
+
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt[:, 0] * a)                              # (B, H)
+    xh = xs.reshape(b, h, hd)
+    s_new = state["s"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt[:, 0].astype(xh.dtype), xh, bs[:, 0]
+    ).astype(jnp.float32)
+    y = jnp.einsum("bn,bhpn->bhp", cs[:, 0], s_new.astype(cs.dtype))
+    y = y + xh * p["d_skip"][:, None].astype(y.dtype)
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out"], {"conv": new_conv, "s": s_new}
+
+
+def init_ssm_state(cfg, batch: int) -> dict:
+    di, n = cfg.ssm_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), jnp.dtype(cfg.dtype)),
+        "s": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

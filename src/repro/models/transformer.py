@@ -1,0 +1,478 @@
+"""Generic decoder/encoder LM assembled from ModelConfig.
+
+One code path covers all 10 assigned architectures:
+
+  dense   : x += attn(ln1 x); x += mlp(ln2 x)
+  moe     : x += attn(ln1 x); x += moe(ln2 x)
+  ssm     : x += ssd(ln1 x)                       (Mamba-2: no attention/MLP)
+  hybrid  : x += ½(attn + ssd)(ln1 x); x += mlp(ln2 x)   (Hymba parallel heads)
+  vlm     : dense + cross-attn layer after every ``cross_attn_every`` layers
+  audio   : encoder-only dense (no causal mask, stub frontend projection)
+
+Layers run under ``lax.scan`` with configurable remat; VLM runs one scan
+per cross-attn group (static Python loop over groups keeps the HLO small).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention_chunked,
+    attention_decode,
+    attention_dense,
+    init_attn,
+    init_mlp,
+    mlp_apply,
+    qkv_project,
+    rms_norm,
+    rope,
+)
+from repro.models.moe import init_moe, moe_apply
+from repro.models.sharding import shard_activation
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    L = cfg.n_layers
+    p: Params = {}
+    if cfg.frontend_dim:
+        p["frontend"] = jax.random.normal(keys[0], (cfg.frontend_dim, d), dt) * cfg.frontend_dim ** -0.5
+    p["embed"] = jax.random.normal(keys[1], (cfg.vocab_size, d), dt) * 0.02
+
+    blocks: Params = {"ln1": jnp.ones((L, d), dt)}
+    if cfg.has_attention:
+        blocks["attn"] = init_attn(keys[2], cfg, layers=L)
+    if cfg.has_ssm:
+        blocks["ssm"] = ssm_mod.init_ssm(keys[3], cfg, layers=L)
+    if cfg.is_moe:
+        blocks["ln2"] = jnp.ones((L, d), dt)
+        blocks["moe"] = init_moe(keys[4], cfg, layers=L)
+    elif cfg.d_ff:
+        blocks["ln2"] = jnp.ones((L, d), dt)
+        blocks["mlp"] = init_mlp(keys[4], cfg, layers=L)
+    p["blocks"] = blocks
+
+    if cfg.n_cross_layers:
+        lc = cfg.n_cross_layers
+        p["cross"] = {
+            "ln": jnp.ones((lc, d), dt),
+            "attn": init_attn(keys[5], cfg, layers=lc),
+        }
+    p["final_norm"] = jnp.ones((d,), dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[6], (d, cfg.vocab_size), dt) * d ** -0.5
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence forward).
+# ---------------------------------------------------------------------------
+
+def _self_attention(bp, x, cfg, positions):
+    q, k, v = qkv_project(bp, x, cfg, positions)
+    l = x.shape[1]
+    if l > cfg.attn_chunk_threshold:
+        o = attention_chunked(
+            q, k, v, positions, positions, causal=cfg.causal,
+            window=cfg.sliding_window,
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        )
+    else:
+        o = attention_dense(
+            q, k, v, positions, positions, causal=cfg.causal,
+            window=cfg.sliding_window,
+        )
+    return o.reshape(*x.shape[:2], -1) @ bp["wo"]
+
+
+def _block(cfg: ModelConfig, x, bp, positions):
+    """One transformer block. Returns (x, aux).
+
+    Sharding shape (under a policy): the residual carry stays
+    sequence-sharded; each section gathers the sequence once
+    (``block_compute``) and computes with head/ff dims sharded by the
+    weights; the residual-add constraint reduce-scatters back.
+    """
+    aux = {}
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    h = shard_activation(h, "residual")
+    delta = 0.0
+    if cfg.has_attention:
+        delta = _self_attention(bp["attn"], h, cfg, positions)
+    if cfg.has_ssm:
+        s = ssm_mod.ssm_apply(bp["ssm"], h, cfg)
+        delta = (delta + s) * (0.5 if cfg.parallel_ssm and cfg.has_attention else 1.0)
+    x = x + delta
+    if cfg.is_moe:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        m, aux = _moe_dispatch(bp["moe"], h2, cfg)
+        x = x + m
+    elif cfg.d_ff:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h2, cfg)
+    return shard_activation(x, "residual"), aux
+
+
+def _moe_dispatch(mp, h, cfg):
+    """Select the MoE execution engine (EXPERIMENTS.md §Perf cells A/C)."""
+    from repro.models.moe import moe_apply_shard_map
+    from repro.models.sharding import get_policy
+
+    policy = get_policy()
+    if policy is not None and cfg.moe_impl == "shard_map":
+        mesh = policy.mesh
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        tp = sizes.get("model", 1)
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= sizes.get(a, 1)
+        seq_ok = h.shape[1] % tp == 0 and h.shape[0] % dp == 0
+        experts_ok = cfg.moe_shard != "expert" or cfg.n_experts % tp == 0
+        if seq_ok and experts_ok:
+            return moe_apply_shard_map(mp, h, cfg, policy)
+    return moe_apply(mp, h, cfg)
+
+
+def _cross_block(cfg: ModelConfig, x, cp, img):
+    """Cross-attention layer (VLM): queries from text, kv from image."""
+    h = rms_norm(x, cp["ln"], cfg.norm_eps)
+    b, l, _ = h.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (h @ cp["attn"]["wq"]).reshape(b, l, hq, dh)
+    k = (img @ cp["attn"]["wk"]).reshape(b, img.shape[1], hkv, dh)
+    v = (img @ cp["attn"]["wv"]).reshape(b, img.shape[1], hkv, dh)
+    qp = jnp.arange(l)
+    kp = jnp.arange(img.shape[1])
+    o = attention_dense(q, k, v, qp, kp, causal=False)
+    return x + o.reshape(b, l, -1) @ cp["attn"]["wo"]
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(cfg, x, blocks, positions, *, layer_slice=None):
+    """Scan over (a slice of) the stacked layer params."""
+    if layer_slice is not None:
+        blocks = jax.tree.map(lambda a: a[layer_slice], blocks)
+
+    def step(carry, bp):
+        x, aux_acc = carry
+        x, aux = _block(cfg, x, bp, positions)
+        aux_sum = aux_acc + sum(aux.values()) if aux else aux_acc
+        return (x, aux_sum), None
+
+    step = _remat(step, cfg)
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), blocks)
+    return x, aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, *, img=None, frames=None):
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    tokens: (B, L) int32 — or None for pure-frontend (audio) inputs.
+    img:    (B, vision_seq, D) stub image embeddings (vlm).
+    frames: (B, L, frontend_dim) stub frame features (audio).
+    """
+    if cfg.frontend_dim:
+        x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]
+        l = x.shape[1]
+    else:
+        x = params["embed"][tokens]
+        l = tokens.shape[1]
+    positions = jnp.arange(l)
+    x = shard_activation(x, "residual")
+
+    aux = jnp.float32(0.0)
+    if cfg.n_cross_layers:
+        ce = cfg.cross_attn_every
+        for g in range(cfg.n_cross_layers):
+            x, a = _scan_blocks(cfg, x, params["blocks"], positions,
+                                layer_slice=slice(g * ce, (g + 1) * ce))
+            cp = jax.tree.map(lambda t, g=g: t[g], params["cross"])
+            x = _cross_block(cfg, x, cp, img)
+            aux += a
+    else:
+        x, aux = _scan_blocks(cfg, x, params["blocks"], positions)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return shard_activation(logits, "logits"), aux
+
+
+def lm_loss(params, cfg, batch):
+    """Causal-LM (or frame-classification) cross-entropy + aux losses."""
+    logits, aux = forward(
+        params, cfg, batch.get("tokens"),
+        img=batch.get("img"), frames=batch.get("frames"),
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with (KV | SSM | rolling-window) caches.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Cache pytree. Sliding-window archs use a rolling buffer of size
+    ``window`` (this is what makes hymba's 500k-decode cell feasible)."""
+    cache: dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    if cfg.has_attention:
+        s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        kv_shape = (L, batch, s, cfg.n_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(kv_shape, dt)
+        cache["v"] = jnp.zeros(kv_shape, dt)
+    if cfg.has_ssm:
+        st = ssm_mod.init_ssm_state(cfg, batch)
+        cache["ssm"] = {
+            "conv": jnp.zeros((L,) + st["conv"].shape, st["conv"].dtype),
+            "s": jnp.zeros((L,) + st["s"].shape, st["s"].dtype),
+        }
+    if cfg.n_cross_layers:
+        lc = cfg.n_cross_layers
+        cache["cross_k"] = jnp.zeros(
+            (lc, batch, cfg.vision_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _decode_block(cfg, x, bp, cache_slice, length):
+    """One block, one token. cache_slice holds this layer's cache entries."""
+    new_cache = dict(cache_slice)
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    delta = 0.0
+    if cfg.has_attention:
+        pos = jnp.array([length - 1])
+        q, k, v = qkv_project(bp["attn"], h, cfg, pos)
+        s = cache_slice["k"].shape[1]
+        slot = (length - 1) % s if cfg.sliding_window else length - 1
+        k_cache = jax.lax.dynamic_update_slice(
+            cache_slice["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache_slice["v"], v, (0, slot, 0, 0))
+        if cfg.sliding_window:
+            # Rolling buffer: every slot < length is valid; window == size.
+            o = attention_decode(q, k_cache, v_cache, jnp.minimum(length, s))
+        else:
+            o = attention_decode(q, k_cache, v_cache, length)
+        delta = o.reshape(*x.shape[:2], -1) @ bp["attn"]["wo"]
+        new_cache["k"], new_cache["v"] = k_cache, v_cache
+    if cfg.has_ssm:
+        y, st = ssm_mod.ssm_decode(bp["ssm"], h, cache_slice["ssm"], cfg)
+        delta = (delta + y) * (0.5 if cfg.parallel_ssm and cfg.has_attention else 1.0)
+        new_cache["ssm"] = st
+    x = x + delta
+    if cfg.is_moe:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        m, _ = moe_apply(bp["moe"], h2, cfg, dropless=True)  # decode: no drops
+        x = x + m
+    elif cfg.d_ff:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h2, cfg)
+    return x, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token, cache):
+    """One autoregressive step. token: (B, 1) int32. Returns (logits, cache).
+
+    RoPE note: keys are stored *rotated* at their absolute position, so the
+    rolling window buffer needs no re-rotation.
+    """
+    x = params["embed"][token]
+    length = cache["length"] + 1
+
+    per_layer = {}
+    if cfg.has_attention:
+        per_layer["k"] = cache["k"]
+        per_layer["v"] = cache["v"]
+    if cfg.has_ssm:
+        per_layer["ssm"] = cache["ssm"]
+
+    def step(x, inp):
+        bp, cs = inp
+        x, new_cs = _decode_block(cfg, x, bp, cs, length)
+        return x, new_cs
+
+    if cfg.n_cross_layers:
+        ce = cfg.n_cross_layers
+        new_per_layer = []
+        for g in range(ce):
+            sl = slice(g * cfg.cross_attn_every, (g + 1) * cfg.cross_attn_every)
+            bp_g = jax.tree.map(lambda a: a[sl], params["blocks"])
+            cs_g = jax.tree.map(lambda a: a[sl], per_layer)
+            x, new_cs = jax.lax.scan(step, x, (bp_g, cs_g))
+            new_per_layer.append(new_cs)
+            cp = jax.tree.map(lambda t, g=g: t[g], params["cross"])
+            dh, hq = cfg.head_dim, cfg.n_heads
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            q = (h @ cp["attn"]["wq"]).reshape(x.shape[0], 1, hq, dh)
+            o = attention_decode(q, cache["cross_k"][g], cache["cross_v"][g],
+                                 cfg.vision_seq)
+            x = x + o.reshape(x.shape[0], 1, -1) @ cp["attn"]["wo"]
+        new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_per_layer)
+    else:
+        x, new_cache = jax.lax.scan(step, x, (params["blocks"], per_layer))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+
+    out = dict(cache)
+    out.update(new_cache)
+    out["length"] = length
+    return logits, out
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, *, img=None, frames=None,
+            max_len: int | None = None):
+    """Process a full prompt; returns (last-token logits, primed cache).
+
+    Implemented as the full-sequence forward plus cache extraction — one
+    pass, chunked attention for long prompts.
+    """
+    if cfg.frontend_dim:
+        b, l = frames.shape[0], frames.shape[1]
+    else:
+        b, l = tokens.shape
+    max_len = max_len or l
+    cache = init_cache(cfg, b, max_len)
+    positions = jnp.arange(l)
+
+    if cfg.frontend_dim:
+        x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]
+    else:
+        x = params["embed"][tokens]
+    x = shard_activation(x, "residual")
+
+    kv_rows = []
+
+    def step(carry, bp):
+        x = carry
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        delta = 0.0
+        k = v = None
+        if cfg.has_attention:
+            q, k, v = qkv_project(bp["attn"], h, cfg, positions)
+            if l > cfg.attn_chunk_threshold:
+                o = attention_chunked(q, k, v, positions, positions,
+                                      causal=cfg.causal, window=cfg.sliding_window,
+                                      q_chunk=cfg.attn_q_chunk,
+                                      k_chunk=cfg.attn_k_chunk)
+            else:
+                o = attention_dense(q, k, v, positions, positions,
+                                    causal=cfg.causal, window=cfg.sliding_window)
+            delta = o.reshape(b, l, -1) @ bp["attn"]["wo"]
+        st_out = None
+        if cfg.has_ssm:
+            y = ssm_mod.ssm_apply(bp["ssm"], h, cfg)
+            delta = (delta + y) * (0.5 if cfg.parallel_ssm and cfg.has_attention else 1.0)
+            st_out = _ssm_prefill_state(bp["ssm"], h, cfg)
+        x = x + delta
+        if cfg.is_moe:
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m, _ = _moe_dispatch(bp["moe"], h2, cfg)
+            x = x + m
+        elif cfg.d_ff:
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(bp["mlp"], h2, cfg)
+        x = shard_activation(x, "residual")
+        return x, (k, v, st_out)
+
+    if cfg.n_cross_layers:
+        # Cross-attn kv caches are static per image: precompute.
+        outs = []
+        dh, hkv = cfg.head_dim, cfg.n_kv_heads
+        for g in range(cfg.n_cross_layers):
+            sl = slice(g * cfg.cross_attn_every, (g + 1) * cfg.cross_attn_every)
+            bp_g = jax.tree.map(lambda a: a[sl], params["blocks"])
+            x, kv = jax.lax.scan(step, x, bp_g)
+            outs.append(kv)
+            cp = jax.tree.map(lambda t, g=g: t[g], params["cross"])
+            x = _cross_block(cfg, x, cp, img)
+            cache["cross_k"] = cache["cross_k"].at[g].set(
+                (img @ cp["attn"]["wk"]).reshape(b, -1, hkv, dh))
+            cache["cross_v"] = cache["cross_v"].at[g].set(
+                (img @ cp["attn"]["wv"]).reshape(b, -1, hkv, dh))
+        ks = jnp.concatenate([o[0] for o in outs])
+        vs = jnp.concatenate([o[1] for o in outs])
+        st = None
+    else:
+        x, (ks, vs, st) = jax.lax.scan(step, x, params["blocks"])
+
+    if cfg.has_attention:
+        s = cache["k"].shape[2]
+        if cfg.sliding_window and l > s:
+            # Keep the last `s` positions in rolling order (slot = pos % s).
+            pos = l - s + jnp.arange(s)
+            take = jnp.zeros((s,), jnp.int32).at[pos % s].set(pos)
+            ks, vs = ks[:, :, take], vs[:, :, take]
+        elif ks.shape[2] < s:
+            ks, vs = _pad_kv(ks, s), _pad_kv(vs, s)
+        cache["k"], cache["v"] = ks, vs
+    if cfg.has_ssm:
+        cache["ssm"] = st
+    cache["length"] = jnp.int32(l)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, cache
+
+
+def _pad_kv(k, s):
+    pad = s - k.shape[2]
+    return jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def _ssm_prefill_state(sp, h, cfg):
+    """Final (conv, state) after a prompt — recomputed in closed form."""
+    b, l, _ = h.shape
+    di, n = cfg.ssm_inner, cfg.ssm_state
+    xz = h @ sp["in_xz"]
+    xs_pre = xz[..., :di]
+    bs_pre = h @ sp["in_b"]
+    cs_pre = h @ sp["in_c"]
+    # Conv tail state: the last (K-1) pre-activation inputs.
+    k = cfg.ssm_conv
+    cat = jnp.concatenate([xs_pre, bs_pre, cs_pre], axis=-1)
+    conv_state = cat[:, -(k - 1):]
+    from repro.models.ssm import _causal_conv
+    xs = _causal_conv(xs_pre, sp["conv_x"])
+    bs = _causal_conv(bs_pre, sp["conv_b"])
+    dt = jax.nn.softplus((h @ sp["in_dt"]).astype(jnp.float32) + sp["dt_bias"])
+    a = -jnp.exp(sp["a_log"])
+    dta = dt * a
+    # s = sum_t exp(sum_{t'>t} dta_{t'}) dt_t x_t B_t^T
+    tail = jnp.cumsum(dta[:, ::-1], axis=1)[:, ::-1]         # (B, L, H) incl. self
+    w = jnp.exp(tail - dta) * dt                             # decay after t
+    hh = cfg.ssm_heads
+    xh = xs.reshape(b, l, hh, cfg.ssm_head_dim)
+    s = jnp.einsum("blh,blhp,bln->bhpn", w.astype(xh.dtype), xh, bs)
+    return {"conv": conv_state, "s": s.astype(jnp.float32)}

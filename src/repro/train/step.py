@@ -1,0 +1,76 @@
+"""Train-step builder: loss → grad → (compress) → clip → AdamW.
+
+``make_train_step`` returns a pure jittable function with optional
+microbatch gradient accumulation (``lax.scan`` over microbatches — the
+standard memory/parallelism trade) and optional int8 gradient compression
+with error feedback on the data-parallel all-reduce (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.train import compression
+from repro.train.optimizer import OptimizerConfig, adamw_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+):
+    """Returns train_step(params, opt_state, batch[, comp_state]) -> ..."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+        # Split the batch leading axis into microbatches and scan.
+        def resplit(x):
+            if x is None:
+                return None
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(resplit, batch)
+
+        def step(carry, mbatch):
+            loss_acc, grad_acc = carry
+            loss, _, grads = grads_of(params, mbatch)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(step, (jnp.float32(0), zeros), mb)
+        scale = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return loss * scale, {}, grads
+
+    if compress_grads:
+        def train_step(params, opt_state, batch, comp_state):
+            loss, metrics, grads = accumulate(params, batch)
+            grads, comp_state = compression.compress_decompress(grads, comp_state)
+            params, opt_state, opt_metrics = adamw_update(
+                params, opt_state, grads, opt_cfg)
+            return params, opt_state, comp_state, {
+                "loss": loss, **metrics, **opt_metrics}
+    else:
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = accumulate(params, batch)
+            params, opt_state, opt_metrics = adamw_update(
+                params, opt_state, grads, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step

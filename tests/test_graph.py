@@ -1,0 +1,105 @@
+"""Graph substrate tests: generators, CSR invariants, partitioner."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph.csr import SENTINEL, build_graph, ell_degrees, to_ell
+from repro.graph.generators import (
+    bipartite_random,
+    erdos_renyi,
+    grid_2d,
+    hex_mesh,
+    mycielskian,
+    random_geometric,
+    rmat,
+)
+from repro.graph.partition import PAD_GID, partition_graph
+
+
+def _symmetric(g):
+    src = np.repeat(np.arange(g.n), np.diff(g.offsets))
+    pairs = set(zip(src.tolist(), g.targets.tolist()))
+    return all((b, a) in pairs for a, b in pairs)
+
+
+@pytest.mark.parametrize("g", [
+    hex_mesh(6, 5, 4), grid_2d(12, 9), rmat(7, 6, seed=1),
+    random_geometric(300, 0.08, seed=2), mycielskian(6),
+    erdos_renyi(200, 6.0, seed=3), bipartite_random(50, 30, 3, seed=4),
+])
+def test_generators_clean(g):
+    assert _symmetric(g)
+    src = np.repeat(np.arange(g.n), np.diff(g.offsets))
+    assert (src != g.targets).all()          # no self-loops
+    # No multi-edges: per-row targets unique.
+    for v in range(0, g.n, max(g.n // 50, 1)):
+        nb = g.neighbors(v)
+        assert len(nb) == len(np.unique(nb))
+
+
+def test_hex_mesh_degrees():
+    g = hex_mesh(8, 8, 8)
+    assert g.max_degree == 6
+    inner = g.degrees[(np.arange(g.n) % 8 > 0)]
+    assert g.degrees.min() >= 3
+
+
+def test_mycielskian_size_and_triangle_free():
+    g = mycielskian(6)
+    assert g.n == 47  # 3*2^(k-2)-1
+    # Triangle-free: no neighbor pair is connected (sampled).
+    for v in range(0, g.n, 5):
+        nb = set(g.neighbors(v).tolist())
+        for u in list(nb)[:10]:
+            assert not (nb & set(g.neighbors(u).tolist()))
+
+
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_build_graph_random(n, deg, seed):
+    rng = np.random.default_rng(seed)
+    m = n * deg
+    g = build_graph(rng.integers(0, n, m), rng.integers(0, n, m), n)
+    assert _symmetric(g)
+    assert g.offsets[-1] == len(g.targets)
+
+
+def test_ell_roundtrip():
+    g = rmat(6, 4, seed=5)
+    ell = to_ell(g)
+    assert ell.shape == (g.n, g.max_degree)
+    assert (ell_degrees(ell) == g.degrees).all()
+    for v in range(0, g.n, 7):
+        row = ell[v][ell[v] != SENTINEL]
+        assert set(row.tolist()) == set(g.neighbors(v).tolist())
+
+
+@pytest.mark.parametrize("strategy", ["block", "edge_balanced", "random"])
+@pytest.mark.parametrize("second_layer", [False, True])
+def test_partition_invariants(strategy, second_layer):
+    g = rmat(8, 6, seed=2)
+    pg = partition_graph(g, 4, strategy=strategy, second_layer=second_layer, seed=1)
+    # Every vertex owned exactly once.
+    owned = pg.vertex_gid[pg.vertex_gid != PAD_GID]
+    assert sorted(owned.tolist()) == list(range(g.n))
+    # Ghost slots point at the right vertex on the owner.
+    for p in range(4):
+        real = pg.ghost_gid[p] != SENTINEL
+        gp = pg.ghost_part[p][real]
+        gs = pg.ghost_slot[p][real]
+        got = pg.vertex_gid[gp, pg.send_idx[gp, gs]]
+        assert (got == pg.ghost_gid[p][real]).all()
+    # Boundary vertices have at least one out-of-part neighbor.
+    for p in range(4):
+        nb_is_ghost = (pg.adj_cidx[p] >= pg.n_local) & (
+            pg.adj_cidx[p] < pg.n_local + pg.n_ghost)
+        assert (nb_is_ghost.any(axis=1) == pg.is_boundary[p]).all()
+
+
+def test_slab_partition_halo():
+    g = hex_mesh(16, 6, 6)
+    pg = partition_graph(g, 4)
+    assert pg.halo_neighbors_ok()
+    pg_r = partition_graph(g, 4, strategy="random", seed=3)
+    assert not pg_r.halo_neighbors_ok()

@@ -1,0 +1,107 @@
+"""Pallas kernel sweeps: shapes × dtypes × flags vs the jnp oracles.
+
+Integer kernels — equality is exact (assert_allclose with zero tolerance).
+Interpret mode executes kernel bodies on CPU (TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _mk_inputs(n, w, n_ghost, n_colors, seed, deg_max=50):
+    rng = np.random.default_rng(seed)
+    n_tab = n + n_ghost + 1
+    adj = rng.integers(0, n_tab, (n, w)).astype(np.int32)
+    tab = np.concatenate([
+        rng.integers(0, n_colors + 1, n + n_ghost), [0]]).astype(np.int32)
+    base = rng.integers(1, 40, n).astype(np.int32)
+    active = (rng.random(n) < 0.8)
+    deg_tab = np.concatenate([
+        rng.integers(0, deg_max, n + n_ghost), [0]]).astype(np.int32)
+    gid_tab = np.concatenate([
+        rng.permutation(10 * (n + n_ghost))[: n + n_ghost], [2**31 - 2]
+    ]).astype(np.int32)
+    bd = rng.random(n) < 0.5
+    return (jnp.asarray(adj), jnp.asarray(tab), jnp.asarray(base),
+            jnp.asarray(active), jnp.asarray(deg_tab), jnp.asarray(gid_tab),
+            jnp.asarray(bd))
+
+
+SHAPES = [(16, 3, 8), (100, 7, 40), (256, 1, 1), (515, 12, 200), (64, 33, 9)]
+
+
+@pytest.mark.parametrize("n,w,g", SHAPES)
+@pytest.mark.parametrize("tile", [64, 256])
+def test_vb_bit_sweep(n, w, g, tile):
+    adj, tab, base, active, _, _, _ = _mk_inputs(n, w, g, 60, seed=n + tile)
+    got = ops.vb_bit_assign(adj, tab[:n], base, active, tab, tile=tile)
+    want = ref.vb_bit_assign_ref(adj, tab[:n], base, active, tab)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=0)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=0)
+
+
+@pytest.mark.parametrize("n,w,g", SHAPES)
+@pytest.mark.parametrize("rd", [True, False])
+def test_conflict_sweep(n, w, g, rd):
+    adj, tab, base, active, deg_tab, gid_tab, bd = _mk_inputs(n, w, g, 6, seed=n)
+    got = ops.conflict_detect(adj, tab[:n], deg_tab[:n], gid_tab[:n], bd,
+                              tab, deg_tab, gid_tab, n, recolor_degrees=rd)
+    want = ref.conflict_detect_ref(adj, tab[:n], deg_tab[:n], gid_tab[:n], bd,
+                                   tab, deg_tab, gid_tab, n, recolor_degrees=rd)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    assert int(got[2]) == int(want[2])
+
+
+@pytest.mark.parametrize("n,w,g", [(16, 3, 8), (64, 5, 30), (130, 9, 60)])
+@pytest.mark.parametrize("partial_d2", [False, True])
+def test_d2_forbidden_sweep(n, w, g, partial_d2):
+    adj, tab, base, active, _, _, _ = _mk_inputs(n, w, g, 20, seed=n * 7)
+    rng = np.random.default_rng(n)
+    ext = jnp.asarray(
+        rng.integers(0, n + g + 1, (n + g + 1, w)).astype(np.int32))
+    got = ops.d2_forbidden(adj, base, active, tab[:n], tab, ext,
+                           partial_d2=partial_d2)
+    want = ref.d2_forbidden_ref(adj, base, active, tab[:n], tab, ext,
+                                partial_d2=partial_d2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(n=st.integers(4, 120), w=st.integers(1, 16), seed=st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_vb_bit_property(n, w, seed):
+    adj, tab, base, active, _, _, _ = _mk_inputs(n, w, 10, 50, seed)
+    got = ops.vb_bit_assign(adj, tab[:n], base, active, tab)
+    want = ref.vb_bit_assign_ref(adj, tab[:n], base, active, tab)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    # Invariant: assigned color is never a neighbor's color.
+    colors = np.asarray(got[0])
+    tabn = np.asarray(tab)
+    newly = (np.asarray(tab[:n]) == 0) & (colors > 0) & np.asarray(active)
+    nbr = tabn[np.asarray(adj)]
+    clash = (nbr == colors[:, None]) & (colors[:, None] > 0)
+    assert not (clash.any(axis=1) & newly).any()
+
+
+def test_pallas_local_color_matches_core():
+    from repro.core.distributed import build_device_state
+    from repro.core.local import local_color_d1
+    from repro.graph.generators import rmat
+    from repro.graph.partition import partition_graph
+
+    g = rmat(7, 5, seed=9)
+    pg = partition_graph(g, 2)
+    st_ = build_device_state(pg, "d1")
+    nl, gh = pg.n_local, pg.n_ghost
+    tab0 = jnp.zeros(nl + gh + 1, jnp.int32)
+    args = (jnp.asarray(st_["adj_cidx"][0]), tab0,
+            jnp.asarray(st_["active0"][0]), jnp.asarray(st_["deg_tab"][0]),
+            jnp.asarray(st_["gid_tab"][0]))
+    a = local_color_d1(*args)
+    b = ops.local_color_d1_pallas(*args)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,76 @@
+"""Roofline parser tests: synthetic HLO text + a real lowered program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import hlo_totals, parse_hlo, roofline_terms
+
+SYNTH = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (p.0: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p.0 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p.0), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%p.0), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %dot.1 = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]{1,0}) tuple(%ni, %ar)
+}
+
+%cond.1 (p.1: (s32[], f32[128,256])) -> pred[] {
+  %p.1 = (s32[], f32[128,256]{1,0}) parameter(0)
+  %i.1 = s32[] get-tuple-element(%p.1), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,256]{1,0}) tuple(%zero, %a)
+  %wl = (s32[], f32[128,256]{1,0}) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[128,256]{1,0} get-tuple-element(%wl), index=1
+  ROOT %out = f32[128,256]{1,0} all-gather(%ag), dimensions={0}
+}
+"""
+
+
+def test_synthetic_while_scaling():
+    t = hlo_totals(SYNTH)
+    # dot: 2*128*256*256 flops, x10 trip count.
+    assert t["hlo_flops_per_dev"] == 2 * 128 * 256 * 256 * 10
+    # all-reduce payload: 2x operand bytes x10; all-gather: output bytes x1.
+    ar = 2 * 128 * 256 * 4 * 10
+    ag = 128 * 256 * 4
+    assert t["collective_bytes_per_dev"]["all-reduce"] == ar
+    assert t["collective_bytes_per_dev"]["all-gather"] == ag
+    terms = roofline_terms(t)
+    assert terms["dominant"] in ("compute", "memory", "collective")
+
+
+def test_real_lowered_matmul_flops():
+    def f(x, w):
+        return jnp.tanh(x @ w)
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    t = hlo_totals(compiled.as_text())
+    assert t["hlo_flops_per_dev"] == 2 * 64 * 128 * 32
+    assert t["collective_total_per_dev"] == 0
+
+
+def test_scan_trip_count_detected():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    compiled = jax.jit(f).lower(x).compile()
+    t = hlo_totals(compiled.as_text())
+    assert t["hlo_flops_per_dev"] == 2 * 32 * 32 * 32 * 7
