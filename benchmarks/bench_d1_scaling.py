@@ -1,8 +1,16 @@
 """Paper Fig. 3/4: D1 strong scaling + comm/comp split.
 
 Fixed graphs (PDE-mesh analogue + social analogue), part counts 1..16.
-``derived`` = colors;rounds;comm_bytes_per_round (the communication-volume
-axis of Fig. 4 — wall time on 1 CPU core is not the reproduction axis).
+``derived`` = colors;rounds;comm;commtot (the communication-volume axis of
+Fig. 4 — wall time on 1 CPU core is not the reproduction axis).  Beyond
+the paper's figure, two sweeps exercise the pluggable runtime layers:
+
+* ``fig3/exchange/...`` — all_gather vs halo vs delta on a slab-
+  partitioned hex mesh; ``comm`` is the *measured* per-round payload, so
+  the delta rows show the communication-reduction trajectory
+  (``by_round`` column).
+* ``fig3/backend/...`` — reference (jnp) vs pallas (interpret on CPU)
+  round time through the identical distributed loop.
 """
 from __future__ import annotations
 
@@ -11,6 +19,12 @@ from repro.core.distributed import color_distributed
 from repro.core.validate import is_proper_d1
 from repro.graph.generators import hex_mesh, rmat
 from repro.graph.partition import partition_graph
+
+
+def _derived(res) -> str:
+    return (f"colors={res.n_colors};rounds={res.rounds};"
+            f"comm={res.comm_bytes_per_round};commtot={res.comm_bytes_total};"
+            f"conf={res.total_conflicts}")
 
 
 def run() -> list[str]:
@@ -24,7 +38,29 @@ def run() -> list[str]:
                 pg, problem="d1", engine="simulate"))
             assert is_proper_d1(g, res.colors)
             rows.append(row(
-                f"fig3/{g.name}/p{p}", us,
-                f"colors={res.n_colors};rounds={res.rounds};"
-                f"comm={res.comm_bytes_per_round};conf={res.total_conflicts}"))
+                f"fig3/{g.name}/p{p}/reference/all_gather", us, _derived(res)))
+
+    # Exchange-strategy sweep: slab partitions (block) so halo is legal.
+    g = graphs[0]
+    pg = partition_graph(g, 8, strategy="block")
+    for exchange in ("all_gather", "halo", "delta"):
+        res, us = timed(lambda pg=pg, ex=exchange: color_distributed(
+            pg, problem="d1", engine="simulate", exchange=ex))
+        assert is_proper_d1(g, res.colors)
+        by_round = "/".join(str(int(b)) for b in res.comm_bytes_by_round)
+        rows.append(row(
+            f"fig3/exchange/{g.name}/p8/reference/{exchange}", us,
+            _derived(res) + f";by_round={by_round}"))
+
+    # Backend sweep: pallas interpret mode is a CPU emulation of the TPU
+    # kernels, so this row is a correctness-at-scale + call-graph datum,
+    # not a TPU speed claim (same caveat as bench_kernels).
+    gs = hex_mesh(12, 8, 8, name="hex_small")
+    pgs = partition_graph(gs, 4, strategy="block")
+    for backend in ("reference", "pallas"):
+        res, us = timed(lambda pg=pgs, b=backend: color_distributed(
+            pg, problem="d1", engine="simulate", backend=b, exchange="delta"))
+        assert is_proper_d1(gs, res.colors)
+        rows.append(row(
+            f"fig3/backend/{gs.name}/p4/{backend}/delta", us, _derived(res)))
     return rows

@@ -4,6 +4,11 @@ Interpret mode runs the kernel body in Python on CPU — the timing column
 is NOT a TPU number; the purpose here is (a) correctness at bench scale
 and (b) the op-level call graph for the roofline discussion.  ``derived``
 = checksum equality with the oracle.
+
+Beyond the raw kernels, the ``backend/*`` rows time the *composed*
+per-part steps (full local-coloring fixed point + conflict sweep) through
+the ``LocalBackend`` interface — the unit the distributed loop actually
+dispatches per round — for both the reference and pallas backends.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timed
+from repro.core.backend import get_backend
 from repro.core.distributed import build_device_state
 from repro.graph.generators import rmat
 from repro.graph.partition import partition_graph
@@ -32,6 +38,8 @@ def run() -> list[str]:
     deg_tab = jnp.asarray(st["deg_tab"][0])
     gid_tab = jnp.asarray(st["gid_tab"][0])
     ext = jnp.asarray(st["ext_adj_cidx"][0])
+    two_hop = jnp.asarray(st["two_hop_cidx"][0])
+    boundary = jnp.asarray(st["is_boundary"][0])
 
     (kc, kb), us_k = timed(lambda: ops.vb_bit_assign(adj, tab[:nl], base, active, tab))
     (rc, rb), us_r = timed(lambda: ref.vb_bit_assign_ref(adj, tab[:nl], base, active, tab))
@@ -41,10 +49,10 @@ def run() -> list[str]:
 
     out_k, us_k = timed(lambda: ops.conflict_detect(
         adj, tab[:nl], deg_tab[:nl], gid_tab[:nl],
-        jnp.asarray(st["is_boundary"][0]), tab, deg_tab, gid_tab, nl))
+        boundary, tab, deg_tab, gid_tab, nl))
     out_r, us_r = timed(lambda: ref.conflict_detect_ref(
         adj, tab[:nl], deg_tab[:nl], gid_tab[:nl],
-        jnp.asarray(st["is_boundary"][0]), tab, deg_tab, gid_tab, nl))
+        boundary, tab, deg_tab, gid_tab, nl))
     ok = bool((np.asarray(out_k[0]) == np.asarray(out_r[0])).all())
     rows.append(row("kernel/conflict/pallas_interp", us_k, f"match_ref={ok}"))
     rows.append(row("kernel/conflict/jnp_ref", us_r, "oracle"))
@@ -54,4 +62,26 @@ def run() -> list[str]:
     ok = bool((np.asarray(f_k) == np.asarray(f_r)).all())
     rows.append(row("kernel/d2_forbidden/pallas_interp", us_k, f"match_ref={ok}"))
     rows.append(row("kernel/d2_forbidden/jnp_ref", us_r, "oracle"))
+
+    # Composed backend steps (the distributed loop's per-round unit).
+    tab0 = jnp.zeros_like(tab)
+    outs = {}
+    for name in ("reference", "pallas"):
+        b = get_backend(name)
+        (colored), us_c = timed(lambda b=b: b.color_d1(
+            adj, tab0, active, deg_tab, gid_tab, recolor_degrees=True))
+        outs[name] = np.asarray(colored)
+        rows.append(row(f"backend/{name}/color_d1", us_c,
+                        f"colors={int(np.unique(outs[name][outs[name] > 0]).size)}"))
+        _, us_d = timed(lambda b=b: b.detect(
+            adj, tab[:nl], tab, deg_tab, gid_tab, boundary,
+            recolor_degrees=True))
+        rows.append(row(f"backend/{name}/detect", us_d, "alg4_sweep"))
+        (c2), us_2 = timed(lambda b=b: b.color_d2(
+            adj, two_hop, ext, tab0, active, deg_tab, gid_tab,
+            partial_d2=False, recolor_degrees=True))
+        rows.append(row(f"backend/{name}/color_d2", us_2,
+                        f"colors={int(np.unique(np.asarray(c2)[np.asarray(c2) > 0]).size)}"))
+    ok = bool((outs["reference"] == outs["pallas"]).all())
+    rows.append(row("backend/parity/color_d1", 0, f"identical={ok}"))
     return rows

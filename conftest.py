@@ -1,0 +1,18 @@
+"""Pytest bootstrap: prefer real deps, fall back to hermetic stand-ins.
+
+The dev container is hermetic (no pip), so when ``hypothesis`` is absent
+the property tests run against ``repro._compat.hypothesis_fallback`` — a
+deterministic sampler with the same decorator surface.  CI installs the
+real package and this shim is a no-op there.
+"""
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+if importlib.util.find_spec("hypothesis") is None:
+    from repro._compat import hypothesis_fallback
+
+    sys.modules["hypothesis"] = hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = hypothesis_fallback.strategies

@@ -1,0 +1,99 @@
+"""Minimal ``hypothesis`` stand-in for hermetic (no-network) containers.
+
+The test suite's property tests use a small slice of hypothesis:
+``@given`` with positional/keyword strategies, ``@settings(max_examples,
+deadline)``, and ``st.integers / floats / booleans``.  When the real
+package is available it is always preferred (``conftest.py`` only
+installs this module into ``sys.modules`` when the import fails); this
+fallback replays each property test over a deterministic sample of the
+strategy space — no shrinking, no database, but the same assertions run
+against the same kind of randomized inputs, seeded per test so failures
+reproduce.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A draw function over a numpy Generator (duck-types hypothesis)."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self._label = label
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"fallback.{self._label}"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value},{max_value})",
+    )
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value},{max_value})",
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Record max_examples on the test function (deadline is ignored)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Replay the test over deterministic draws from each strategy.
+
+    The RNG is seeded from the test's qualified name, so every run (and
+    every CI shard) sees the same examples.
+    """
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+
+        # No functools.wraps: pytest would follow ``__wrapped__`` to the
+        # original signature and treat the strategy params as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+# ``from hypothesis import strategies as st`` needs a module object.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.SearchStrategy = SearchStrategy
+sys.modules.setdefault("hypothesis.strategies", strategies)

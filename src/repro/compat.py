@@ -1,0 +1,23 @@
+"""Version compatibility shims.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` only in
+newer jax releases; the container pins jax 0.4.37 where only the
+experimental path exists.  ``check_rep=False`` is required there because
+the coloring loop's ``lax.while_loop`` has no replication rule.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    try:
+        from jax.experimental.shard_map import shard_map as _sm
+
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    except ImportError:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)

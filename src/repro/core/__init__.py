@@ -3,6 +3,8 @@
 Public API:
   - color_distributed: D1 / D1-2GL / D2 / PD2 over a device mesh (shard_map)
   - color_single_device: single-device speculate&iterate (quality baseline)
+  - backend: pluggable local-compute backends ("reference" jnp / "pallas")
+  - exchange: pluggable ghost-exchange strategies (all_gather / halo / delta)
   - greedy: serial greedy oracle (Alg. 1)
   - validate: proper-coloring checkers
 """
@@ -14,6 +16,23 @@ from repro.core.validate import (
     num_colors,
 )
 from repro.core.local import local_color_d1, local_color_d2
+from repro.core.backend import (
+    BACKENDS,
+    LocalBackend,
+    PallasBackend,
+    ReferenceBackend,
+    get_backend,
+    register_backend,
+)
+from repro.core.exchange import (
+    EXCHANGES,
+    AllGatherExchange,
+    DeltaExchange,
+    ExchangeStrategy,
+    HaloExchange,
+    get_exchange,
+    register_exchange,
+)
 from repro.core.distributed import ColoringResult, color_distributed, color_single_device
 
 __all__ = [
@@ -29,4 +48,17 @@ __all__ = [
     "color_distributed",
     "color_single_device",
     "ColoringResult",
+    "LocalBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "BACKENDS",
+    "get_backend",
+    "register_backend",
+    "ExchangeStrategy",
+    "AllGatherExchange",
+    "HaloExchange",
+    "DeltaExchange",
+    "EXCHANGES",
+    "get_exchange",
+    "register_exchange",
 ]

@@ -1,0 +1,181 @@
+"""Pluggable local-compute backends for the distributed coloring runtime.
+
+Following KokkosKernels' pluggable-algorithm design (Deveci et al.), the
+per-part compute steps of the speculate-and-iterate loop — speculative
+local (re)coloring and cross-partition conflict detection — are behind a
+small :class:`LocalBackend` interface with two implementations:
+
+* ``reference`` — the pure-``jnp`` path (``repro.core.local``), runs
+  everywhere, serves as the correctness oracle;
+* ``pallas``    — the TPU kernel path (``repro.kernels.ops``): ``vb_bit``
+  assignment, ``d2_forbidden`` two-hop accumulation, and the ``conflict``
+  kernel for detection.  Interpret mode on CPU, Mosaic-compiled on TPU.
+
+Both backends implement the *same math* (the kernels are tested bit-exact
+against the jnp oracles), so swapping backends changes neither colorings
+nor round counts — ``tests/test_kernels.py::test_backend_parity_*`` pins
+this.  Select with ``color_distributed(..., backend="pallas")`` or
+``--backend`` on the CLI.  Third-party backends can be added with
+:func:`register_backend`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conflict import v_loses
+from repro.core.local import local_color_d1, local_color_d2
+
+__all__ = [
+    "LocalBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "BACKENDS",
+    "get_backend",
+    "register_backend",
+]
+
+
+class LocalBackend:
+    """Interface for per-part compute steps (no collectives).
+
+    All methods take/return the part-local layout used by the runtime:
+    ``color_tab`` is the (n_local + n_ghost + 1,) color table (owned
+    vertices, then ghosts, then one pad slot); adjacency arrays hold
+    color-table indices.
+    """
+
+    name: str = "abstract"
+
+    def color_d1(self, adj_cidx, color_tab, active, deg_tab, gid_tab, *,
+                 recolor_degrees: bool):
+        """Distance-1 speculative coloring of ``active`` rows; returns the
+        updated color table."""
+        raise NotImplementedError
+
+    def color_d2(self, adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active,
+                 deg_tab, gid_tab, *, partial_d2: bool, recolor_degrees: bool):
+        """Distance-2 / partial-distance-2 speculative coloring."""
+        raise NotImplementedError
+
+    def detect(self, adj_cidx, colors_loc, color_tab, deg_tab, gid_tab,
+               is_boundary, *, recolor_degrees: bool):
+        """Alg-4 owned-vs-ghost conflict sweep over one adjacency block.
+
+        Returns ``(lose_v, lose_o, count)``: per-row lose mask (already
+        boundary-masked), per-edge neighbor-side lose flags (scattered into
+        the ghost table by the caller), and the conflict count.
+        """
+        raise NotImplementedError
+
+
+class ReferenceBackend(LocalBackend):
+    """Pure-``jnp`` backend (``repro.core.local`` + ``v_loses``)."""
+
+    name = "reference"
+
+    def color_d1(self, adj_cidx, color_tab, active, deg_tab, gid_tab, *,
+                 recolor_degrees):
+        return local_color_d1(adj_cidx, color_tab, active, deg_tab, gid_tab,
+                              recolor_degrees=recolor_degrees)
+
+    def color_d2(self, adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active,
+                 deg_tab, gid_tab, *, partial_d2, recolor_degrees):
+        return local_color_d2(adj_cidx, two_hop_cidx, color_tab, active,
+                              deg_tab, gid_tab, partial_d2=partial_d2,
+                              recolor_degrees=recolor_degrees)
+
+    def detect(self, adj_cidx, colors_loc, color_tab, deg_tab, gid_tab,
+               is_boundary, *, recolor_degrees):
+        n_loc = colors_loc.shape[0]
+        n_tab = color_tab.shape[0] - 1      # last slot is pad
+        is_ghost = (adj_cidx >= n_loc) & (adj_cidx < n_tab)
+        co = color_tab[adj_cidx]
+        do = deg_tab[adj_cidx]
+        go = gid_tab[adj_cidx]
+        deg_loc, gid_loc = deg_tab[:n_loc], gid_tab[:n_loc]
+        vl = v_loses(colors_loc[:, None], co, deg_loc[:, None], do,
+                     gid_loc[:, None], go,
+                     recolor_degrees=recolor_degrees) & is_ghost
+        ol = v_loses(co, colors_loc[:, None], do, deg_loc[:, None],
+                     go, gid_loc[:, None],
+                     recolor_degrees=recolor_degrees) & is_ghost
+        lose_v = vl.any(axis=1) & is_boundary
+        return lose_v, ol, (vl | ol).sum().astype(jnp.int32)
+
+
+class PallasBackend(LocalBackend):
+    """TPU-kernel backend (``repro.kernels.ops`` wrappers).
+
+    ``interpret=None`` auto-selects: compiled Mosaic kernels on TPU, the
+    Pallas interpreter everywhere else (the kernels are TPU-targeted, so
+    CPU *and* GPU installs must not attempt to lower them).
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, interpret: bool | None = None,
+                 tile_d1: int = 256, tile_d2: int = 128):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self.tile_d1 = tile_d1
+        self.tile_d2 = tile_d2
+
+    def color_d1(self, adj_cidx, color_tab, active, deg_tab, gid_tab, *,
+                 recolor_degrees):
+        from repro.kernels.ops import local_color_d1_pallas
+
+        return local_color_d1_pallas(
+            adj_cidx, color_tab, active, deg_tab, gid_tab,
+            recolor_degrees=recolor_degrees,
+            interpret=self.interpret, tile=self.tile_d1,
+        )
+
+    def color_d2(self, adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active,
+                 deg_tab, gid_tab, *, partial_d2, recolor_degrees):
+        from repro.kernels.ops import local_color_d2_pallas
+
+        return local_color_d2_pallas(
+            adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active,
+            deg_tab, gid_tab, partial_d2=partial_d2,
+            recolor_degrees=recolor_degrees,
+            interpret=self.interpret, tile=self.tile_d2,
+        )
+
+    def detect(self, adj_cidx, colors_loc, color_tab, deg_tab, gid_tab,
+               is_boundary, *, recolor_degrees):
+        from repro.kernels.ops import conflict_detect
+
+        n_loc = colors_loc.shape[0]
+        lose_v, lose_o, count = conflict_detect(
+            adj_cidx, colors_loc, deg_tab[:n_loc], gid_tab[:n_loc],
+            is_boundary, color_tab, deg_tab, gid_tab, n_loc,
+            recolor_degrees=recolor_degrees, interpret=self.interpret,
+        )
+        return lose_v, lose_o, count.astype(jnp.int32)
+
+
+BACKENDS: dict[str, type[LocalBackend]] = {
+    "reference": ReferenceBackend,
+    "pallas": PallasBackend,
+}
+
+
+def register_backend(name: str, cls: type[LocalBackend]) -> None:
+    """Register a third-party :class:`LocalBackend` under ``name``."""
+    BACKENDS[name] = cls
+
+
+def get_backend(backend: str | LocalBackend | None) -> LocalBackend:
+    """Resolve ``backend`` (name, instance, or None → reference)."""
+    if backend is None:
+        return ReferenceBackend()
+    if isinstance(backend, LocalBackend):
+        return backend
+    try:
+        return BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: {sorted(BACKENDS)}"
+        ) from None

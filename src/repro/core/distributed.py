@@ -1,15 +1,21 @@
 """Distributed speculate-and-iterate coloring (paper Algorithm 2).
 
-Two execution engines share the same per-part step functions:
+Layered runtime: one *shared loop driver* (:func:`_make_loop`) executes
+the speculate→exchange→detect round structure for both execution engines,
+parameterized by a pluggable compute backend and exchange strategy:
 
-* ``shard_map`` — one XLA program over a device mesh axis ``"p"``; ghost
-  exchange is a ``jax.lax.all_gather`` (general graphs) or a two-way
-  ``ppermute`` halo (slab partitions); the entire speculate-iterate loop is
-  a ``lax.while_loop`` with an on-device ``psum`` convergence test — zero
-  host round-trips (beyond-paper: the paper's MPI loop is host-driven).
-* ``simulate`` — the identical math ``vmap``-ped over the part axis on one
-  device, with the exchange as a gather.  This is how 128-part runs execute
-  in the CPU container, and it matches ``shard_map`` bit-for-bit (tested).
+* **engines** — ``shard_map`` (one XLA program over a device mesh axis
+  ``"p"``, on-device ``lax.while_loop`` + ``psum`` convergence test — zero
+  host round-trips) and ``simulate`` (the identical driver ``vmap``-ped
+  over the part axis on one device).  Both call the same driver with the
+  same per-part step functions, so they execute identical math
+  (tested bit-for-bit).
+* **backends** (``repro.core.backend``) — ``reference`` (pure ``jnp``)
+  or ``pallas`` (TPU kernels: vb_bit / d2_forbidden / conflict).
+* **exchange strategies** (``repro.core.exchange``) — ``all_gather``,
+  ``halo`` (slab ppermute), or ``delta`` (changed-colors-only, the
+  paper's communication-reduction direction); per-round payload bytes are
+  *measured* and reported in ``ColoringResult.comm_bytes_by_round``.
 
 Problems: ``d1``, ``d1_2gl``, ``d2``, ``pd2`` (paper §3.2-§3.6).
 """
@@ -22,8 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.conflict import v_loses
-from repro.core.local import local_color_d1, local_color_d2
+from repro.compat import shard_map as _shard_map
+from repro.core.backend import LocalBackend, ReferenceBackend, get_backend
+from repro.core.exchange import ExchangeStrategy, get_exchange, send_buffer
 from repro.graph.csr import SENTINEL, Graph
 from repro.graph.partition import PAD_GID, PartitionedGraph, partition_graph
 
@@ -36,6 +43,12 @@ __all__ = [
 
 PROBLEMS = ("d1", "d1_2gl", "d2", "pd2")
 
+_REFERENCE = ReferenceBackend()
+
+# Back-compat alias: baseline.py / jones_plassmann.py / tests import the
+# send packer from here.
+_send_buffer = send_buffer
+
 
 @dataclasses.dataclass
 class ColoringResult:
@@ -44,9 +57,16 @@ class ColoringResult:
     converged: bool
     n_colors: int
     total_conflicts: int        # sum over rounds of detected conflicts
-    comm_bytes_per_round: int   # exchange payload per device per round
+    comm_bytes_per_round: int   # mean measured payload per device per round
     problem: str
     n_parts: int
+    backend: str = "reference"
+    exchange: str = "all_gather"
+    comm_bytes_total: int = 0   # sum of per-round measured payloads
+    # (rounds+1,) measured payload per device for each exchange, starting
+    # with the post-initial-coloring one.  None for runtimes that predate
+    # measured accounting (baseline / Jones-Plassmann).
+    comm_bytes_by_round: np.ndarray | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -104,19 +124,21 @@ def build_device_state(pg: PartitionedGraph, problem: str) -> dict[str, np.ndarr
 
 
 # ---------------------------------------------------------------------------
-# Per-part step functions (pure; no collectives).
+# Per-part step functions (pure; no collectives; backend-pluggable).
 # ---------------------------------------------------------------------------
 
 def _recolor_part(st, colors_loc, ghost_colors, active_loc, active_ghost, *,
-                  problem: str, recolor_degrees: bool):
+                  problem: str, recolor_degrees: bool,
+                  backend: LocalBackend | None = None):
     """Recolor active vertices of one part; returns new local colors."""
+    backend = backend or _REFERENCE
     n_loc = colors_loc.shape[0]
     zero = jnp.zeros((1,), jnp.int32)
     color_tab = jnp.concatenate([colors_loc, ghost_colors, zero])
     if problem in ("d2", "pd2"):
-        color_tab = local_color_d2(
-            st["adj_cidx"], st["two_hop_cidx"], color_tab, active_loc,
-            st["deg_tab"], st["gid_tab"],
+        color_tab = backend.color_d2(
+            st["adj_cidx"], st["two_hop_cidx"], st["ext_adj_cidx"],
+            color_tab, active_loc, st["deg_tab"], st["gid_tab"],
             partial_d2=(problem == "pd2"), recolor_degrees=recolor_degrees,
         )
         return color_tab[:n_loc]
@@ -129,20 +151,21 @@ def _recolor_part(st, colors_loc, ghost_colors, active_loc, active_ghost, *,
         tab = jnp.concatenate(
             [colors_loc, jnp.where(active_ghost, 0, ghost_colors), zero]
         )
-        tab = local_color_d1(
+        tab = backend.color_d1(
             st["ext_adj_cidx"][: n_loc + n_ghost], tab, active_ext,
             st["deg_tab"], st["gid_tab"], recolor_degrees=recolor_degrees,
         )
         return tab[:n_loc]
     # plain d1
-    color_tab = local_color_d1(
+    color_tab = backend.color_d1(
         st["adj_cidx"], color_tab, active_loc, st["deg_tab"], st["gid_tab"],
         recolor_degrees=recolor_degrees,
     )
     return color_tab[:n_loc]
 
 
-def _detect_part(st, colors_loc, ghost_colors, *, problem: str, recolor_degrees: bool):
+def _detect_part(st, colors_loc, ghost_colors, *, problem: str,
+                 recolor_degrees: bool, backend: LocalBackend | None = None):
     """Cross-partition conflict detection (Alg. 3 / Alg. 5).
 
     Returns (lose_loc (nl,), lose_ghost (G,), n_conflicts scalar).  Only
@@ -150,110 +173,86 @@ def _detect_part(st, colors_loc, ghost_colors, *, problem: str, recolor_degrees:
     local coloring.  Both endpoints' owners reach the same verdict because
     the loser rule is a pure function of replicated per-vertex data.
     """
+    backend = backend or _REFERENCE
     n_loc = colors_loc.shape[0]
     n_ghost = ghost_colors.shape[0]
     pad_cidx = n_loc + n_ghost
     zero = jnp.zeros((1,), jnp.int32)
     color_tab = jnp.concatenate([colors_loc, ghost_colors, zero])
-    deg_tab, gid_tab = st["deg_tab"], st["gid_tab"]
-    gid_loc, deg_loc = gid_tab[:n_loc], deg_tab[:n_loc]
-
-    def pair_losses(idx):
-        is_ghost = (idx >= n_loc) & (idx < pad_cidx)
-        c_o, d_o, g_o = color_tab[idx], deg_tab[idx], gid_tab[idx]
-        vl = v_loses(colors_loc[:, None], c_o, deg_loc[:, None], d_o,
-                     gid_loc[:, None], g_o, recolor_degrees=recolor_degrees)
-        ol = v_loses(c_o, colors_loc[:, None], d_o, deg_loc[:, None],
-                     g_o, gid_loc[:, None], recolor_degrees=recolor_degrees)
-        return vl & is_ghost, ol & is_ghost, idx
 
     lose_loc = jnp.zeros((n_loc,), bool)
     lose_tab = jnp.zeros((pad_cidx + 1,), bool)
     n_conf = jnp.int32(0)
 
-    if problem != "pd2":
-        vl, ol, idx = pair_losses(st["adj_cidx"])
-        lose_loc |= vl.any(axis=1)
-        lose_tab = lose_tab.at[idx.reshape(-1)].max(ol.reshape(-1))
-        n_conf += (vl | ol).sum().astype(jnp.int32)
-    if problem in ("d2", "pd2"):
-        vl2, ol2, idx2 = pair_losses(st["two_hop_cidx"])
-        lose_loc |= vl2.any(axis=1)
-        lose_tab = lose_tab.at[idx2.reshape(-1)].max(ol2.reshape(-1))
-        n_conf += (vl2 | ol2).sum().astype(jnp.int32)
+    def sweep(adj, lose_loc, lose_tab, n_conf):
+        vl, ol, c = backend.detect(
+            adj, colors_loc, color_tab, st["deg_tab"], st["gid_tab"],
+            st["is_boundary"], recolor_degrees=recolor_degrees,
+        )
+        lose_loc |= vl
+        lose_tab = lose_tab.at[adj.reshape(-1)].max(ol.reshape(-1))
+        return lose_loc, lose_tab, n_conf + c
 
-    lose_loc &= st["is_boundary"]
+    if problem != "pd2":
+        lose_loc, lose_tab, n_conf = sweep(st["adj_cidx"], lose_loc, lose_tab, n_conf)
+    if problem in ("d2", "pd2"):
+        lose_loc, lose_tab, n_conf = sweep(st["two_hop_cidx"], lose_loc, lose_tab, n_conf)
+
     return lose_loc, lose_tab[n_loc:pad_cidx], n_conf
 
 
-def _send_buffer(colors_loc, st):
-    return jnp.where(st["send_mask"], colors_loc[st["send_idx"]], 0)
-
-
 # ---------------------------------------------------------------------------
-# SPMD program (shard_map engine).
+# Shared loop driver (engine-agnostic).
 # ---------------------------------------------------------------------------
 
-def _make_spmd_run(*, problem: str, recolor_degrees: bool, max_rounds: int,
-                   exchange: str, axis: str = "p"):
-    """Per-device program for shard_map: the full Alg-2 loop on device."""
+def _make_loop(recolor, detect, exchange, all_sum, *, max_rounds: int):
+    """Build the speculate→exchange→detect loop from engine primitives.
 
-    def run(st, colors0):
-        def do_exchange(colors_loc):
-            send = _send_buffer(colors_loc, st)
-            if exchange == "all_gather":
-                allbuf = jax.lax.all_gather(send, axis)              # (P, S)
-                ghost = allbuf[st["ghost_part"], st["ghost_slot"]]
-            else:  # halo
-                p = jax.lax.axis_index(axis)
-                n = jax.lax.axis_size(axis)
-                fwd = [(i, i + 1) for i in range(n - 1)]             # recv from p-1
-                bwd = [(i + 1, i) for i in range(n - 1)]             # recv from p+1
-                from_prev = jax.lax.ppermute(send, axis, fwd)
-                from_next = jax.lax.ppermute(send, axis, bwd)
-                ghost = jnp.where(
-                    st["ghost_part"] < p,
-                    from_prev[st["ghost_slot"]],
-                    from_next[st["ghost_slot"]],
-                )
-            return jnp.where(st["ghost_real"], ghost, 0)
+    Both engines call this with the *same* per-part step functions — the
+    ``shard_map`` engine binds per-device state + ``lax`` collectives, the
+    ``simulate`` engine binds ``vmap``-ped steps + a stacked gather — so
+    they provably execute identical math.
 
-        zeros_g = jnp.zeros((st["ghost_part"].shape[0],), jnp.int32)
-        colors = _recolor_part(
-            st, colors0, zeros_g, st["active0"], jnp.zeros_like(st["ghost_real"]),
-            problem=problem, recolor_degrees=recolor_degrees,
-        )
-        ghost = do_exchange(colors)
-        lose_l, lose_g, conf = _detect_part(
-            st, colors, ghost, problem=problem, recolor_degrees=recolor_degrees
-        )
-        conf = jax.lax.psum(conf, axis)
+      recolor(colors, ghost, active_local, active_ghost) -> colors
+      detect(colors, ghost) -> (lose_local, lose_ghost, n_conflicts)
+      exchange(colors, ex_state) -> (ghost, payload_bytes, ex_state)
+      all_sum(x) -> global scalar (psum / sum over the part axis)
+    """
 
-        def cond(carry):
-            _, _, _, _, conf, rounds, _ = carry
-            return (conf > 0) & (rounds < max_rounds)
+    def loop(colors0, zeros_ghost, active0, no_ghost_active, ex_state0):
+        colors = recolor(colors0, zeros_ghost, active0, no_ghost_active)
+        ghost, nbytes, ex_state = exchange(colors, ex_state0)
+        lose_l, lose_g, conf = detect(colors, ghost)
+        conf = all_sum(conf)
+        bytes_hist = jnp.zeros((max_rounds + 1,), jnp.int32).at[0].set(nbytes)
+        carry = {
+            "colors": colors, "ghost": ghost, "lose_l": lose_l,
+            "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
+            "rounds": jnp.int32(0), "total": conf, "bytes": bytes_hist,
+        }
 
-        def body(carry):
-            colors, ghost, lose_l, lose_g, conf, rounds, total = carry
-            colors = jnp.where(lose_l, 0, colors)
-            colors = _recolor_part(
-                st, colors, ghost, lose_l, lose_g,
-                problem=problem, recolor_degrees=recolor_degrees,
-            )
-            ghost = do_exchange(colors)
-            lose_l, lose_g, conf = _detect_part(
-                st, colors, ghost, problem=problem, recolor_degrees=recolor_degrees
-            )
-            conf = jax.lax.psum(conf, axis)
-            return colors, ghost, lose_l, lose_g, conf, rounds + 1, total + conf
+        def cond(c):
+            return (c["conf"] > 0) & (c["rounds"] < max_rounds)
 
-        colors, ghost, lose_l, lose_g, conf, rounds, total = jax.lax.while_loop(
-            cond, body,
-            (colors, ghost, lose_l, lose_g, conf, jnp.int32(0), conf),
-        )
-        return colors, rounds, conf, total
+        def body(c):
+            colors = jnp.where(c["lose_l"], 0, c["colors"])
+            colors = recolor(colors, c["ghost"], c["lose_l"], c["lose_g"])
+            ghost, nbytes, ex_state = exchange(colors, c["ex_state"])
+            lose_l, lose_g, conf = detect(colors, ghost)
+            conf = all_sum(conf)
+            rounds = c["rounds"] + 1
+            return {
+                "colors": colors, "ghost": ghost, "lose_l": lose_l,
+                "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
+                "rounds": rounds, "total": c["total"] + conf,
+                "bytes": c["bytes"].at[rounds].set(nbytes),
+            }
 
-    return run
+        out = jax.lax.while_loop(cond, body, carry)
+        return (out["colors"], out["rounds"], out["conf"], out["total"],
+                out["bytes"])
+
+    return loop
 
 
 # ---------------------------------------------------------------------------
@@ -272,13 +271,22 @@ def color_distributed(
     *,
     problem: str = "d1",
     recolor_degrees: bool = True,
-    exchange: str = "all_gather",
+    backend: str | LocalBackend = "reference",
+    exchange: str | ExchangeStrategy = "all_gather",
     max_rounds: int = 64,
     engine: str = "auto",
     mesh: jax.sharding.Mesh | None = None,
     color_mask: np.ndarray | None = None,
 ) -> ColoringResult:
     """Color a partitioned graph with the paper's distributed algorithm.
+
+    backend: "reference" (pure jnp) or "pallas" (TPU kernels; interpret
+    mode on CPU) — see ``repro.core.backend``.  Both produce identical
+    colorings and round counts.
+
+    exchange: "all_gather", "halo" (slab partitions only), or "delta"
+    (changed-colors-only) — see ``repro.core.exchange``.  Per-round
+    payload bytes are measured and reported in the result.
 
     engine: "shard_map" (needs >= n_parts devices), "simulate" (vmap on one
     device), or "auto".
@@ -289,8 +297,12 @@ def color_distributed(
     with the bipartite V_s mask, only the Jacobian's column set is
     colored, matching Zoltan's behavior.
     """
-    if exchange == "halo" and not pg.halo_neighbors_ok():
-        raise ValueError("halo exchange requires slab partitions (ghosts on p±1 only)")
+    backend = get_backend(backend)
+    strategy = get_exchange(exchange)
+    if strategy.requires_slab and not pg.halo_neighbors_ok():
+        raise ValueError(
+            f"{strategy.name} exchange requires slab partitions (ghosts on p±1 only)"
+        )
     st_np = build_device_state(pg, problem)
     if color_mask is not None:
         gids = np.clip(pg.vertex_gid, 0, pg.n_global - 1)
@@ -301,45 +313,63 @@ def color_distributed(
         engine = "shard_map" if len(jax.devices()) >= P > 1 else "simulate"
 
     colors0 = np.zeros((P, pg.n_local), np.int32)
+    step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
+                   backend=backend)
     if engine == "shard_map":
         from jax.sharding import PartitionSpec as PS
 
         if mesh is None:
             mesh = jax.make_mesh((P,), ("p",))
-        run = _make_spmd_run(
-            problem=problem, recolor_degrees=recolor_degrees,
-            max_rounds=max_rounds, exchange=exchange,
-        )
 
         def device_fn(st, c):
             st = {k: v[0] for k, v in st.items()}       # strip part axis
-            colors, rounds, conf, total = run(st, c[0])
-            return colors[None], rounds, conf, total
+            loop = _make_loop(
+                partial(_recolor_part, st, **step_kw),
+                partial(_detect_part, st, **step_kw),
+                partial(strategy.device, st, axis="p", n_parts=P),
+                partial(jax.lax.psum, axis_name="p"),
+                max_rounds=max_rounds,
+            )
+            zeros_g = jnp.zeros((st["ghost_part"].shape[0],), jnp.int32)
+            colors, rounds, conf, total, nbytes = loop(
+                c[0], zeros_g, st["active0"], jnp.zeros_like(st["ghost_real"]),
+                strategy.init_state(st),
+            )
+            return colors[None], rounds, conf, total, nbytes
 
         specs = {k: PS("p") for k in st_np}
         f = jax.jit(
-            jax.shard_map(
+            _shard_map(
                 device_fn,
                 mesh=mesh,
                 in_specs=(specs, PS("p")),
-                out_specs=(PS("p"), PS(), PS(), PS()),
+                out_specs=(PS("p"), PS(), PS(), PS(), PS()),
             )
         )
         st = {k: jnp.asarray(v) for k, v in st_np.items()}
-        colors, rounds, conf, total = f(st, jnp.asarray(colors0))
-        colors = np.asarray(colors)
-        rounds = int(np.asarray(rounds).reshape(-1)[0])
-        conf = int(np.asarray(conf).reshape(-1)[0])
-        total = int(np.asarray(total).reshape(-1)[0])
+        colors, rounds, conf, total, nbytes = f(st, jnp.asarray(colors0))
     else:
-        colors, rounds, conf, total = _simulate(
-            st_np, colors0, problem=problem, recolor_degrees=recolor_degrees,
+        st = {k: jnp.asarray(v) for k, v in st_np.items()}
+        recolor = jax.vmap(partial(_recolor_part, **step_kw))
+        detect = jax.vmap(partial(_detect_part, **step_kw))
+        loop = _make_loop(
+            lambda colors, ghost, al, ag: recolor(st, colors, ghost, al, ag),
+            lambda colors, ghost: detect(st, colors, ghost),
+            partial(strategy.stacked, st),
+            jnp.sum,
             max_rounds=max_rounds,
         )
+        zeros_g = jnp.zeros(st_np["ghost_part"].shape, jnp.int32)
+        colors, rounds, conf, total, nbytes = loop(
+            jnp.asarray(colors0), zeros_g, st["active0"],
+            jnp.zeros_like(st["ghost_real"]), strategy.init_state(st),
+        )
 
+    rounds = int(np.asarray(rounds).reshape(-1)[0])
+    conf = int(np.asarray(conf).reshape(-1)[0])
+    total = int(np.asarray(total).reshape(-1)[0])
+    by_round = np.asarray(nbytes).reshape(-1, max_rounds + 1)[0][: rounds + 1]
     gathered = _gather_colors(pg, np.asarray(colors))
-    s = pg.send_width
-    payload = (P * s * 4) if exchange == "all_gather" else (2 * s * 4)
     from repro.core.validate import num_colors as _nc
 
     return ColoringResult(
@@ -348,54 +378,23 @@ def color_distributed(
         converged=bool(conf == 0),
         n_colors=_nc(gathered),
         total_conflicts=total,
-        comm_bytes_per_round=payload,
+        comm_bytes_per_round=int(by_round.mean()) if by_round.size else 0,
         problem=problem,
         n_parts=P,
+        backend=backend.name,
+        exchange=strategy.name,
+        comm_bytes_total=int(by_round.sum()),
+        comm_bytes_by_round=by_round.astype(np.int64),
     )
 
 
-def _simulate(st_np, colors0, *, problem, recolor_degrees, max_rounds):
-    """vmap engine: identical math on one device, exchange as a gather."""
-    st = {k: jnp.asarray(v) for k, v in st_np.items()}
-    recolor = jax.jit(jax.vmap(
-        partial(_recolor_part, problem=problem, recolor_degrees=recolor_degrees)
-    ))
-    detect = jax.jit(jax.vmap(
-        partial(_detect_part, problem=problem, recolor_degrees=recolor_degrees)
-    ))
-    sendbuf = jax.vmap(_send_buffer)
-
-    @jax.jit
-    def exchange(colors):
-        allbuf = sendbuf(colors, st)                        # (P, S)
-        ghost = allbuf[st["ghost_part"], st["ghost_slot"]]  # (P, G)
-        return jnp.where(st["ghost_real"], ghost, 0)
-
-    P, G = st_np["ghost_part"].shape
-    colors = jnp.asarray(colors0)
-    zeros_g = jnp.zeros((P, G), jnp.int32)
-    colors = recolor(st, colors, zeros_g, st["active0"],
-                     jnp.zeros_like(st["ghost_real"]))
-    ghost = exchange(colors)
-    lose_l, lose_g, conf = detect(st, colors, ghost)
-    conf_g = int(conf.sum())
-    rounds, total = 0, conf_g
-    while conf_g > 0 and rounds < max_rounds:
-        colors = jnp.where(lose_l, 0, colors)
-        colors = recolor(st, colors, ghost, lose_l, lose_g)
-        ghost = exchange(colors)
-        lose_l, lose_g, conf = detect(st, colors, ghost)
-        conf_g = int(conf.sum())
-        rounds += 1
-        total += conf_g
-    return np.asarray(colors), rounds, conf_g, total
-
-
 def color_single_device(
-    graph: Graph, *, problem: str = "d1", recolor_degrees: bool = True
+    graph: Graph, *, problem: str = "d1", recolor_degrees: bool = True,
+    backend: str | LocalBackend = "reference",
 ) -> ColoringResult:
     """Single-device speculate&iterate (the paper's 1-GPU baseline)."""
     pg = partition_graph(graph, 1, second_layer=problem != "d1")
     return color_distributed(
-        pg, problem=problem, recolor_degrees=recolor_degrees, engine="simulate"
+        pg, problem=problem, recolor_degrees=recolor_degrees,
+        backend=backend, engine="simulate",
     )

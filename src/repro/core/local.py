@@ -43,7 +43,9 @@ def forbidden_mask(nbr_colors: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
     rel = nbr_colors - base[..., None]
     in_window = (nbr_colors > 0) & (rel >= 0) & (rel < 32)
     bits = jnp.where(in_window, jnp.uint32(1) << rel.astype(jnp.uint32), jnp.uint32(0))
-    return jax.lax.reduce_or(bits, axes=(bits.ndim - 1,))
+    # jnp.bitwise_or.reduce rather than lax.reduce_or: the latter is absent
+    # from the pinned jax (0.4.37).
+    return jnp.bitwise_or.reduce(bits, axis=-1)
 
 
 def pick_color(forbidden: jnp.ndarray, base: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -1,11 +1,15 @@
 """Jit'd wrappers composing the Pallas kernels into full coloring rounds.
 
-``local_color_d1_pallas`` is a drop-in replacement for
-``repro.core.local.local_color_d1`` built from the kernels: assignment
-(vb_bit) + speculative-collision resolution (conflict kernel applied with
-``all_pairs=True`` masking semantics via the wrapper) iterated to a fixed
-point.  The distributed runtime can select it with ``use_kernels=True``
-(interpret mode on CPU; compiled on TPU).
+``local_color_d1_pallas`` / ``local_color_d2_pallas`` are drop-in
+replacements for ``repro.core.local.local_color_d1`` / ``local_color_d2``
+built from the kernels: assignment (vb_bit / d2_forbidden) + speculative-
+collision resolution iterated to a fixed point.  The distributed runtime
+selects them through the pluggable backend layer —
+``color_distributed(..., backend="pallas")`` routes every local-coloring
+and conflict-detection step through these wrappers (see
+``repro.core.backend.PallasBackend``); ``backend="reference"`` keeps the
+pure-``jnp`` path.  Interpret mode executes the kernel bodies on CPU;
+on TPU they compile to Mosaic.
 """
 from __future__ import annotations
 
@@ -18,13 +22,16 @@ from repro.core.conflict import v_loses
 from repro.core.local import pick_color
 from repro.kernels.conflict import conflict_detect
 from repro.kernels.d2_forbidden import d2_forbidden
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.vb_bit import vb_bit_assign
 
 __all__ = [
     "vb_bit_assign",
     "conflict_detect",
     "d2_forbidden",
+    "flash_attention",
     "local_color_d1_pallas",
+    "local_color_d2_pallas",
     "d2_assign_pallas",
 ]
 
@@ -34,7 +41,7 @@ __all__ = [
 )
 def local_color_d1_pallas(
     adj_cidx, color_tab, active, deg_tab, gid_tab, *,
-    recolor_degrees: bool = True, max_iters: int = 96,
+    recolor_degrees: bool = True, max_iters: int = 512,
     interpret: bool = True, tile: int = 256,
 ):
     """Kernel-backed distance-1 local coloring (same contract as core.local)."""
@@ -91,6 +98,55 @@ def d2_assign_pallas(
     new_base = jnp.where(uncolored & ~ok, base + 32, base)
     return new_colors, new_base
 
-from repro.kernels.flash_attention import flash_attention  # noqa: E402
 
-__all__.append("flash_attention")
+@functools.partial(
+    jax.jit,
+    static_argnames=("partial_d2", "recolor_degrees", "max_iters", "interpret", "tile"),
+)
+def local_color_d2_pallas(
+    adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active, deg_tab, gid_tab, *,
+    partial_d2: bool = False, recolor_degrees: bool = True, max_iters: int = 1024,
+    interpret: bool = True, tile: int = 128,
+):
+    """Kernel-backed distance-2 local coloring (same contract as core.local).
+
+    Assignment runs through the ``d2_forbidden`` net-based kernel; the
+    speculative-collision resolution is the identical Alg-4 loser rule over
+    one-hop (unless ``partial_d2``) and two-hop neighborhoods, so the fixed
+    point matches ``repro.core.local.local_color_d2`` exactly.
+    """
+    n_loc = active.shape[0]
+    base0 = jnp.ones((n_loc,), jnp.int32) + 0 * color_tab[:n_loc]
+    deg_loc = deg_tab[:n_loc]
+    gid_loc = gid_tab[:n_loc]
+
+    def cond(st):
+        tab, base, it = st
+        return (it < max_iters) & jnp.any(active & (tab[:n_loc] == 0))
+
+    def body(st):
+        tab, base, it = st
+        colors, base = d2_assign_pallas(
+            adj_cidx, ext_adj_cidx, tab, base, active,
+            partial_d2=partial_d2, tile=tile, interpret=interpret,
+        )
+        tab = tab.at[:n_loc].set(colors)
+        lose2 = v_loses(
+            colors[:, None], tab[two_hop_cidx], deg_loc[:, None],
+            deg_tab[two_hop_cidx], gid_loc[:, None], gid_tab[two_hop_cidx],
+            recolor_degrees=recolor_degrees,
+        ).any(axis=-1)
+        if partial_d2:
+            lose1 = jnp.zeros_like(lose2)
+        else:
+            lose1 = v_loses(
+                colors[:, None], tab[adj_cidx], deg_loc[:, None],
+                deg_tab[adj_cidx], gid_loc[:, None], gid_tab[adj_cidx],
+                recolor_degrees=recolor_degrees,
+            ).any(axis=-1)
+        lose = active & (lose1 | lose2)
+        tab = tab.at[:n_loc].set(jnp.where(lose, 0, colors))
+        return tab, base, it + 1
+
+    color_tab, _, _ = jax.lax.while_loop(cond, body, (color_tab, base0, jnp.int32(0)))
+    return color_tab

@@ -1,11 +1,16 @@
 """Distributed-coloring driver (the paper's workload as a CLI).
 
   PYTHONPATH=src python -m repro.launch.color --graph hex:24,24,24 \
-      --parts 8 --problem d1 [--no-recolor-degrees] [--exchange halo] \
-      [--baseline]
+      --parts 8 --problem d1 [--no-recolor-degrees] [--backend pallas] \
+      [--exchange halo|delta] [--baseline]
 
 Graph specs: hex:NX,NY,NZ | grid:NX,NY | rmat:SCALE,EF | rgg:N,R |
 myc:K | er:N,DEG | bip:ROWS,COLS,NNZ
+
+--backend selects the local-compute backend (reference jnp path or the
+Pallas kernels); --exchange the ghost-exchange strategy, where ``delta``
+ships only boundary colors that changed since the previous round and the
+reported comm/round is the measured payload.
 """
 from __future__ import annotations
 
@@ -49,8 +54,10 @@ def main() -> None:
                     choices=["d1", "d1_2gl", "d2", "pd2"])
     ap.add_argument("--strategy", default="block",
                     choices=["block", "edge_balanced", "random"])
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"])
     ap.add_argument("--exchange", default="all_gather",
-                    choices=["all_gather", "halo"])
+                    choices=["all_gather", "halo", "delta"])
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "shard_map", "simulate"])
     ap.add_argument("--no-recolor-degrees", action="store_true")
@@ -66,21 +73,29 @@ def main() -> None:
                          second_layer=needs_l2)
     t0 = time.time()
     if args.baseline:
+        if args.backend != "reference" or args.exchange != "all_gather":
+            print("[color] note: --baseline uses the reference backend and "
+                  "all_gather exchange; --backend/--exchange are ignored")
         res = color_baseline(pg, problem=args.problem,
                              recolor_degrees=not args.no_recolor_degrees)
     else:
         res = color_distributed(
             pg, problem=args.problem,
             recolor_degrees=not args.no_recolor_degrees,
-            exchange=args.exchange, engine=args.engine)
+            backend=args.backend, exchange=args.exchange, engine=args.engine)
     dt = time.time() - t0
     ok = VALIDATORS[args.problem](g, res.colors)
     print(f"[color] {res.problem} parts={res.n_parts} "
+          f"backend={res.backend} exchange={res.exchange} "
           f"colors={res.n_colors} rounds={res.rounds} "
           f"conflicts={res.total_conflicts} proper={ok} "
           f"converged={res.converged} "
-          f"comm/round={res.comm_bytes_per_round}B time={dt:.2f}s "
+          f"comm/round={res.comm_bytes_per_round}B "
+          f"comm_total={res.comm_bytes_total}B time={dt:.2f}s "
           f"(devices={len(jax.devices())})")
+    if res.comm_bytes_by_round is not None:
+        print(f"[color] comm_bytes_by_round="
+              f"{[int(b) for b in res.comm_bytes_by_round]}")
     if not ok:
         raise SystemExit(1)
 

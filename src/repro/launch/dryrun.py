@@ -42,6 +42,8 @@ def run_cell(arch: str, shape: str, mesh, *, verbose: bool = True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax<=0.4.x returns [dict], newer returns dict
+        cost = cost[0] if cost else None
     cfg = get_config(arch)
     spec = SHAPES[shape]
     record = {

@@ -93,30 +93,36 @@ def train_loop(
     wd = Watchdog()
     history = []
 
-    with use_policy(policy):
-        for step in range(start, steps):
-            if fail_at_step is not None and step == fail_at_step:
-                raise RuntimeError(f"injected failure at step {step}")
-            batch = {k: (jnp.asarray(v) if v is not None else None)
-                     for k, v in data.batch_at(step).items()}
-            wd.start_step()
-            if compress_grads:
-                params, opt_state, comp_state, metrics = jitted(
-                    params, opt_state, batch, comp_state)
-            else:
-                params, opt_state, metrics = jitted(params, opt_state, batch)
-            stats = wd.end_step()
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics.update(step=step, **{k: v for k, v in stats.items() if k != "slow"})
-            history.append(metrics)
-            if step % log_every == 0:
-                print(f"[train] step {step} loss {metrics['loss']:.4f} "
-                      f"({stats['step_time']*1e3:.0f} ms)")
-            if ckpt_dir and (step + 1) % ckpt_every == 0:
-                writer.save(ckpt_dir, step + 1,
-                            {"params": params, "opt": opt_state},
-                            extra={"step": step + 1})
-    writer.wait()
+    # The async writer must land any in-flight checkpoint even when the
+    # loop dies mid-run (the restart drill depends on step_N being
+    # committed, and the worker thread can be GIL-starved behind jitted
+    # steps) — hence the try/finally around the whole step loop.
+    try:
+        with use_policy(policy):
+            for step in range(start, steps):
+                if fail_at_step is not None and step == fail_at_step:
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = {k: (jnp.asarray(v) if v is not None else None)
+                         for k, v in data.batch_at(step).items()}
+                wd.start_step()
+                if compress_grads:
+                    params, opt_state, comp_state, metrics = jitted(
+                        params, opt_state, batch, comp_state)
+                else:
+                    params, opt_state, metrics = jitted(params, opt_state, batch)
+                stats = wd.end_step()
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics.update(step=step, **{k: v for k, v in stats.items() if k != "slow"})
+                history.append(metrics)
+                if step % log_every == 0:
+                    print(f"[train] step {step} loss {metrics['loss']:.4f} "
+                          f"({stats['step_time']*1e3:.0f} ms)")
+                if ckpt_dir and (step + 1) % ckpt_every == 0:
+                    writer.save(ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state},
+                                extra={"step": step + 1})
+    finally:
+        writer.wait()
     if ckpt_dir:
         ckpt.save(ckpt_dir, steps, {"params": params, "opt": opt_state},
                   extra={"step": steps})

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.models.layers import Params
 
 
@@ -101,7 +102,7 @@ def moe_apply_shard_map(p, x, cfg, policy):
         wi_spec = wg_spec = P(None, None, tp)
         wo_spec = P(None, tp, None)
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(None, None), wi_spec, wg_spec, wo_spec, P(dp, tp, None)),
