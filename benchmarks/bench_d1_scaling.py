@@ -5,10 +5,14 @@ Fixed graphs (PDE-mesh analogue + social analogue), part counts 1..16.
 Fig. 4 — wall time on 1 CPU core is not the reproduction axis).  Beyond
 the paper's figure, two sweeps exercise the pluggable runtime layers:
 
-* ``fig3/exchange/...`` — all_gather vs halo vs delta on a slab-
-  partitioned hex mesh; ``comm`` is the *measured* per-round payload, so
-  the delta rows show the communication-reduction trajectory
-  (``by_round`` column).
+* ``fig3/exchange/...`` — all_gather vs halo vs delta vs sparse_delta on
+  a slab-partitioned hex mesh; ``comm`` is the *measured* per-round
+  payload, so the delta rows show the communication-reduction trajectory
+  (``by_round`` column) and the sparse_delta rows the pair payload the
+  ppermute route plan actually moves.  ``run_exchange(toy=True)`` is the
+  CI bench-smoke entry (suite ``exchange_smoke``): same sweep at toy
+  sizes, so exchange regressions are visible per-PR from the uploaded
+  comm-bytes artifact.
 * ``fig3/backend/...`` — reference (jnp) vs pallas (interpret on CPU)
   round time through the identical distributed loop.
 """
@@ -20,11 +24,36 @@ from repro.core.validate import is_proper_d1
 from repro.graph.generators import hex_mesh, rmat
 from repro.graph.partition import partition_graph
 
+EXCHANGES = ("all_gather", "halo", "delta", "sparse_delta")
+
 
 def _derived(res) -> str:
     return (f"colors={res.n_colors};rounds={res.rounds};"
             f"comm={res.comm_bytes_per_round};commtot={res.comm_bytes_total};"
             f"conf={res.total_conflicts}")
+
+
+def run_exchange(toy: bool = False) -> list[str]:
+    """Exchange-strategy sweep on slab partitions (so halo is legal).
+
+    ``toy=True`` is the CI bench-smoke variant: a small mesh, same
+    strategies, completing in seconds; the emitted ``by_round`` columns
+    are the per-PR comm-bytes regression surface.
+    """
+    rows = []
+    g = (hex_mesh(10, 6, 6, name="hex_toy") if toy
+         else hex_mesh(24, 16, 16, name="queen_like"))
+    parts = 4 if toy else 8
+    pg = partition_graph(g, parts, strategy="block")
+    for exchange in EXCHANGES:
+        res, us = timed(lambda pg=pg, ex=exchange: color_distributed(
+            pg, problem="d1", engine="simulate", exchange=ex))
+        assert is_proper_d1(g, res.colors)
+        by_round = "/".join(str(int(b)) for b in res.comm_bytes_by_round)
+        rows.append(row(
+            f"fig3/exchange/{g.name}/p{parts}/reference/{exchange}", us,
+            _derived(res) + f";by_round={by_round}"))
+    return rows
 
 
 def run() -> list[str]:
@@ -41,16 +70,7 @@ def run() -> list[str]:
                 f"fig3/{g.name}/p{p}/reference/all_gather", us, _derived(res)))
 
     # Exchange-strategy sweep: slab partitions (block) so halo is legal.
-    g = graphs[0]
-    pg = partition_graph(g, 8, strategy="block")
-    for exchange in ("all_gather", "halo", "delta"):
-        res, us = timed(lambda pg=pg, ex=exchange: color_distributed(
-            pg, problem="d1", engine="simulate", exchange=ex))
-        assert is_proper_d1(g, res.colors)
-        by_round = "/".join(str(int(b)) for b in res.comm_bytes_by_round)
-        rows.append(row(
-            f"fig3/exchange/{g.name}/p8/reference/{exchange}", us,
-            _derived(res) + f";by_round={by_round}"))
+    rows += run_exchange()
 
     # Backend sweep: pallas interpret mode is a CPU emulation of the TPU
     # kernels, so this row is a correctness-at-scale + call-graph datum,

@@ -63,6 +63,19 @@ def run() -> list[str]:
     rows.append(row("kernel/d2_forbidden/pallas_interp", us_k, f"match_ref={ok}"))
     rows.append(row("kernel/d2_forbidden/jnp_ref", us_r, "oracle"))
 
+    # pair_scatter: the sparse_delta exchange's receive-side apply step.
+    table = jnp.asarray(rng.integers(0, 9, 512).astype(np.int32))
+    n_pairs = 96
+    slots = jnp.asarray(np.concatenate(
+        [rng.permutation(512)[:n_pairs], np.full(512 - n_pairs, 512)]
+    ).astype(np.int32))
+    vals = jnp.asarray(rng.integers(1, 9, 512).astype(np.int32))
+    s_k, us_k = timed(lambda: ops.pair_scatter(table, slots, vals))
+    s_r, us_r = timed(lambda: ref.pair_scatter_ref(table, slots, vals))
+    ok = bool((np.asarray(s_k) == np.asarray(s_r)).all())
+    rows.append(row("kernel/pair_scatter/pallas_interp", us_k, f"match_ref={ok}"))
+    rows.append(row("kernel/pair_scatter/jnp_ref", us_r, "oracle"))
+
     # Composed backend steps (the distributed loop's per-round unit).
     tab0 = jnp.zeros_like(tab)
     outs = {}

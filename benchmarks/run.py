@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
-``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a]``.
+``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a
+exchange_smoke]``.  ``--json PATH`` additionally writes the rows as a
+JSON list of ``{name, us_per_call, derived}`` records — CI's bench-smoke
+job runs ``exchange_smoke`` (the fig3 exchange sweep at toy sizes) and
+uploads that file as the per-PR comm-bytes artifact.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -29,17 +34,37 @@ SUITES = {
     "fig11": lambda: bench_pd2.run(),
     "kernels": lambda: bench_kernels.run(),
     "a2a": lambda: bench_moe_a2a.run(),
+    "exchange_smoke": lambda: bench_d1_scaling.run_exchange(toy=True),
 }
 
 
+def _to_record(csv_row: str) -> dict:
+    name, us, derived = csv_row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("usage: benchmarks.run [suites...] --json PATH")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    which = argv or [k for k in SUITES if k != "exchange_smoke"]
+    records = []
     print("name,us_per_call,derived")
     for key in which:
         t0 = time.time()
         for r in SUITES[key]():
             print(r, flush=True)
+            records.append(_to_record(r))
         print(f"# suite {key} done in {time.time()-t0:.0f}s", flush=True)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} rows to {json_path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -12,15 +12,29 @@ multigraph the optimum is Δ = max port degree.  Greedy/speculative D1 on
 the line graph lands within a small factor of Δ (reported by the bench);
 ``recolorDegrees`` measurably tightens it on skewed traffic — the paper's
 novel heuristic paying off in an LM-serving context.
+
+:func:`exchange_route_plan` turns such a schedule into the device-side
+route tables the ``sparse_delta`` ghost exchange executes — one
+``lax.ppermute`` per phase, with per-phase destination/source vectors so
+a single SPMD program can look up its role by ``axis_index``.  The
+coloring runtime thus schedules *its own* communication with the very
+algorithm it implements.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.distributed import color_single_device
 from repro.graph.csr import build_graph
 
-__all__ = ["schedule_a2a", "phase_lower_bound"]
+__all__ = [
+    "schedule_a2a",
+    "phase_lower_bound",
+    "RoutePlan",
+    "exchange_route_plan",
+]
 
 
 def phase_lower_bound(traffic: np.ndarray) -> int:
@@ -68,3 +82,53 @@ def schedule_a2a(
         dd = [d for _, d in ph]
         assert len(set(ss)) == len(ss) and len(set(dd)) == len(dd)
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """Static ppermute routing for a (P, P) point-to-point traffic graph.
+
+    ``phases[k]`` is a contention-free list of ``(src, dst)`` transfers
+    (one ``lax.ppermute`` round).  ``dst_of``/``src_of`` are
+    ``(n_phases, P)`` int32 tables: in phase ``k`` part ``p`` sends to
+    ``dst_of[k, p]`` and receives from ``src_of[k, p]`` (−1 = idle), so
+    an SPMD program can gather its per-phase role by ``axis_index``.
+    ``edges`` is the full static edge set, each scheduled exactly once.
+    """
+
+    n_parts: int
+    phases: tuple[tuple[tuple[int, int], ...], ...]
+    dst_of: np.ndarray          # (n_phases, P) int32, -1 = no send
+    src_of: np.ndarray          # (n_phases, P) int32, -1 = no recv
+    edges: frozenset[tuple[int, int]]
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.phases)
+
+
+def exchange_route_plan(
+    traffic: np.ndarray, *, recolor_degrees: bool = True
+) -> RoutePlan:
+    """Edge-color ``traffic`` (nonzero = must send) into a :class:`RoutePlan`.
+
+    This is the route plan the ``sparse_delta`` exchange executes: every
+    static owner→ghoster edge of the partition lands in exactly one
+    ppermute phase, and within a phase all sources and destinations are
+    distinct (the one-send/one-receive ICI port model).
+    """
+    p = int(traffic.shape[0])
+    phases = schedule_a2a(traffic, recolor_degrees=recolor_degrees)
+    dst_of = np.full((len(phases), p), -1, dtype=np.int32)
+    src_of = np.full((len(phases), p), -1, dtype=np.int32)
+    for k, ph in enumerate(phases):
+        for s, d in ph:
+            dst_of[k, s] = d
+            src_of[k, d] = s
+    return RoutePlan(
+        n_parts=p,
+        phases=tuple(tuple(ph) for ph in phases),
+        dst_of=dst_of,
+        src_of=src_of,
+        edges=frozenset(e for ph in phases for e in ph),
+    )

@@ -13,8 +13,10 @@ parameterized by a pluggable compute backend and exchange strategy:
 * **backends** (``repro.core.backend``) — ``reference`` (pure ``jnp``)
   or ``pallas`` (TPU kernels: vb_bit / d2_forbidden / conflict).
 * **exchange strategies** (``repro.core.exchange``) — ``all_gather``,
-  ``halo`` (slab ppermute), or ``delta`` (changed-colors-only, the
-  paper's communication-reduction direction); per-round payload bytes are
+  ``halo`` (slab ppermute), ``delta`` (changed-colors-only accounting, the
+  paper's communication-reduction direction), or ``sparse_delta`` (true
+  sparse all-to-all: count-prefixed slot/color pairs routed over
+  edge-colored ``ppermute`` phases); per-round payload bytes are
   *measured* and reported in ``ColoringResult.comm_bytes_by_round``.
 
 Problems: ``d1``, ``d1_2gl``, ``d2``, ``pd2`` (paper §3.2-§3.6).
@@ -284,9 +286,10 @@ def color_distributed(
     mode on CPU) — see ``repro.core.backend``.  Both produce identical
     colorings and round counts.
 
-    exchange: "all_gather", "halo" (slab partitions only), or "delta"
-    (changed-colors-only) — see ``repro.core.exchange``.  Per-round
-    payload bytes are measured and reported in the result.
+    exchange: "all_gather", "halo" (slab partitions only), "delta"
+    (changed-colors-only), or "sparse_delta" (true sparse a2a over
+    ppermute phases) — see ``repro.core.exchange``.  Per-round payload
+    bytes are measured and reported in the result.
 
     engine: "shard_map" (needs >= n_parts devices), "simulate" (vmap on one
     device), or "auto".
@@ -304,6 +307,11 @@ def color_distributed(
             f"{strategy.name} exchange requires slab partitions (ghosts on p±1 only)"
         )
     st_np = build_device_state(pg, problem)
+    # Host-side exchange setup: strategies may contribute extra stacked
+    # tables (e.g. sparse_delta's per-destination need masks + route plan);
+    # they shard over the part axis with the rest of the state, and the
+    # exchange state they seed flows through _make_loop's carry.
+    st_np = {**st_np, **strategy.prepare(pg, st_np)}
     if color_mask is not None:
         gids = np.clip(pg.vertex_gid, 0, pg.n_global - 1)
         st_np = dict(st_np)

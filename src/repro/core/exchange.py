@@ -1,29 +1,45 @@
 """Pluggable ghost-exchange strategies for the distributed coloring loop.
 
-The paper's MPI boundary exchange becomes one of three swappable
+The paper's MPI boundary exchange becomes one of four swappable
 strategies, each implemented twice over the same index tables — once with
 ``lax`` collectives for the ``shard_map`` engine (per-device view) and
 once as a stacked gather for the ``simulate`` engine (part axis leading):
 
-* ``all_gather`` — every part broadcasts its send buffer; ghosts are a
+* ``all_gather``   — every part broadcasts its send buffer; ghosts are a
   static ``(owner_part, send_slot)`` gather from the gathered table.
-  Received bytes/device/round: ``P·S·4``.
-* ``halo``       — two-way ``ppermute`` for slab partitions (ghosts only
-  on parts p±1).  Received bytes/device/round: ``2·S·4``.
-* ``delta``      — iterative-recoloring communication reduction (Sarıyüce
+  Measured bytes/device/round: ``P·S·4``.
+* ``halo``         — two-way ``ppermute`` for slab partitions (ghosts only
+  on parts p±1).  Measured bytes/device/round: ``2·S·4``.
+* ``delta``        — iterative-recoloring communication reduction (Sarıyüce
   et al.): after the first round only boundary vertices whose color
-  *changed* are exchanged; receivers patch their ghost table.  On the wire
-  this is a changed-bitmask plus the changed color words, so the measured
-  payload collapses to ~zero as the conflict set shrinks.  Received
-  bytes/device/round: ``4·(global changed) + P·⌈S/8⌉``.
+  *changed* are exchanged; receivers patch their ghost table.  Still rides
+  all_gather mechanics under the hood — the byte count is the payload a
+  mask+words wire format *would* move: ``4·(global changed) + P·⌈S/8⌉``.
+* ``sparse_delta`` — the true sparse all-to-all: changed boundary colors
+  are packed as count-prefixed ``(send-slot-id, color)`` pairs into
+  fixed-capacity per-destination buffers (capacity = send width) and
+  routed point-to-point with one ``lax.ppermute`` per phase of an
+  edge-colored route plan (``core.a2a_schedule.exchange_route_plan`` —
+  the runtime schedules its own communication with the paper's D1
+  algorithm).  Receivers scatter the pairs into a per-owner slot table.
+  Measured bytes/device/round: ``4·Σ_edges(1 + 2·sent) / P`` — this is
+  the payload actually moved, not an estimate (under ``ppermute`` the
+  fixed-capacity buffer occupies the wire, so wire bytes equal measured
+  bytes exactly when buffers are full; a ragged all-to-all would move
+  the measured count only).
 
 Strategies carry loop state (``init_state``) through the round loop —
-``delta`` keeps the previous send buffer and ghost table; the static
-strategies carry nothing.  Every strategy returns a *measured* per-round
-byte count, which the runtime accumulates into
+``delta`` keeps the previous send buffer and ghost table, ``sparse_delta``
+the previous send buffer and the per-peer slot tables; the static
+strategies carry nothing.  Strategies that need host-side setup (the
+sparse route plan, per-destination need masks) override :meth:`prepare`.
+Every strategy returns a *measured* per-round byte count through the
+shared :func:`payload_bytes` schema, which the runtime accumulates into
 ``ColoringResult.comm_bytes_by_round`` (no more static estimates).
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +49,70 @@ __all__ = [
     "AllGatherExchange",
     "HaloExchange",
     "DeltaExchange",
+    "SparseDeltaExchange",
     "EXCHANGES",
     "get_exchange",
     "register_exchange",
     "send_buffer",
+    "payload_bytes",
+    "pack_pairs",
+    "apply_pairs",
 ]
+
+COLOR_DTYPE = jnp.int32            # the one wire dtype for colors/slots
+COLOR_BYTES = np.dtype(np.int32).itemsize
 
 
 def send_buffer(colors_loc, st):
     """Pack the colors other parts need into the static send layout."""
     return jnp.where(st["send_mask"], colors_loc[st["send_idx"]], 0)
+
+
+def payload_bytes(st, *, colors=0, words=0, masks=0):
+    """Measured payload bytes under one shared schema.
+
+    ``colors``/``words`` count int32 words (``COLOR_BYTES`` each);
+    ``masks`` counts whole changed-bitmasks over the send width.  Every
+    strategy computes its byte accounting through this helper, so the
+    dtype width and the mask-rounding rule live in exactly one place and
+    measured bytes cannot drift between strategies.
+    """
+    s = st["send_idx"].shape[-1]
+    total = COLOR_BYTES * (colors + words) + masks * ((s + 7) // 8)
+    return jnp.asarray(total).astype(COLOR_DTYPE)
+
+
+def pack_pairs(take, send):
+    """Front-pack one destination's changed slots as (slot-id, color) pairs.
+
+    Returns ``(slots, colors, count)`` with capacity ``S = take.shape[0]``:
+    the first ``count`` entries are the selected slot ids in ascending
+    order with their colors; padding carries the out-of-range sentinel
+    slot ``S`` (dropped by :func:`apply_pairs`).  The sort key is fully
+    deterministic (no reliance on sort stability).
+    """
+    s = take.shape[0]
+    count = take.sum().astype(COLOR_DTYPE)
+    key = jnp.where(take, 0, s + 1) + jnp.arange(s, dtype=COLOR_DTYPE)
+    order = jnp.argsort(key).astype(COLOR_DTYPE)
+    valid = jnp.arange(s) < count
+    slots = jnp.where(valid, order, s).astype(COLOR_DTYPE)
+    colors = jnp.where(valid, send[order], 0).astype(COLOR_DTYPE)
+    return slots, colors, count
+
+
+def apply_pairs(table, slots, colors, *, scatter: str = "reference"):
+    """Scatter received (slot-id, color) pairs into a slot table.
+
+    Padded pairs carry slot id >= len(table) and are dropped.  ``scatter``
+    selects the jnp reference or the Pallas ``pair_scatter`` kernel
+    (``repro.kernels.ops``) — both produce identical tables.
+    """
+    if scatter == "pallas":
+        from repro.kernels.ops import pair_scatter
+
+        return pair_scatter(table, slots, colors)
+    return table.at[slots].set(colors, mode="drop")
 
 
 class ExchangeStrategy:
@@ -56,6 +126,16 @@ class ExchangeStrategy:
 
     name: str = "abstract"
     requires_slab: bool = False
+
+    def prepare(self, pg, st):
+        """Host-side setup before the loop (static per graph+partition).
+
+        Returns extra stacked ``(P, ...)`` arrays for the runtime to merge
+        into the device state (sharded over the part axis like everything
+        else).  Static strategies need none; ``sparse_delta`` builds its
+        per-destination need masks and ppermute route plan here.
+        """
+        return {}
 
     def init_state(self, st):
         """Loop-carried exchange state (shapes follow ``st``'s layout)."""
@@ -76,14 +156,14 @@ class AllGatherExchange(ExchangeStrategy):
         allbuf = jax.lax.all_gather(send, axis)                   # (P, S)
         ghost = allbuf[st["ghost_part"], st["ghost_slot"]]
         ghost = jnp.where(st["ghost_real"], ghost, 0)
-        nbytes = jnp.int32(n_parts * send.shape[0] * 4)
+        nbytes = payload_bytes(st, colors=n_parts * send.shape[0])
         return ghost, nbytes, state
 
     def stacked(self, st, colors, state):
         allbuf = jax.vmap(send_buffer)(colors, st)                # (P, S)
         ghost = allbuf[st["ghost_part"], st["ghost_slot"]]
         ghost = jnp.where(st["ghost_real"], ghost, 0)
-        nbytes = jnp.int32(allbuf.shape[0] * allbuf.shape[1] * 4)
+        nbytes = payload_bytes(st, colors=allbuf.shape[0] * allbuf.shape[1])
         return ghost, nbytes, state
 
 
@@ -106,7 +186,7 @@ class HaloExchange(ExchangeStrategy):
             from_next[st["ghost_slot"]],
         )
         ghost = jnp.where(st["ghost_real"], ghost, 0)
-        nbytes = jnp.int32(2 * send.shape[0] * 4)
+        nbytes = payload_bytes(st, colors=2 * send.shape[0])
         return ghost, nbytes, state
 
     def stacked(self, st, colors, state):
@@ -116,7 +196,7 @@ class HaloExchange(ExchangeStrategy):
         allbuf = jax.vmap(send_buffer)(colors, st)
         ghost = allbuf[st["ghost_part"], st["ghost_slot"]]
         ghost = jnp.where(st["ghost_real"], ghost, 0)
-        nbytes = jnp.int32(2 * allbuf.shape[1] * 4)
+        nbytes = payload_bytes(st, colors=2 * allbuf.shape[1])
         return ghost, nbytes, state
 
 
@@ -133,8 +213,8 @@ class DeltaExchange(ExchangeStrategy):
 
     def init_state(self, st):
         return {
-            "prev_send": jnp.zeros(st["send_idx"].shape, jnp.int32),
-            "prev_ghost": jnp.zeros(st["ghost_part"].shape, jnp.int32),
+            "prev_send": jnp.zeros(st["send_idx"].shape, COLOR_DTYPE),
+            "prev_ghost": jnp.zeros(st["ghost_part"].shape, COLOR_DTYPE),
         }
 
     def device(self, st, colors_loc, state, *, axis, n_parts):
@@ -148,8 +228,7 @@ class DeltaExchange(ExchangeStrategy):
             ghost_new, pay_all[st["ghost_part"], st["ghost_slot"]],
             state["prev_ghost"],
         )
-        mask_b = (send.shape[0] + 7) // 8
-        nbytes = (4 * ch_all.sum() + n_parts * mask_b).astype(jnp.int32)
+        nbytes = payload_bytes(st, colors=ch_all.sum(), masks=n_parts)
         return ghost, nbytes, {"prev_send": send, "prev_ghost": ghost}
 
     def stacked(self, st, colors, state):
@@ -161,15 +240,140 @@ class DeltaExchange(ExchangeStrategy):
             ghost_new, payload[st["ghost_part"], st["ghost_slot"]],
             state["prev_ghost"],
         )
-        mask_b = (send.shape[1] + 7) // 8
-        nbytes = (4 * changed.sum() + send.shape[0] * mask_b).astype(jnp.int32)
+        nbytes = payload_bytes(st, colors=changed.sum(), masks=send.shape[0])
         return ghost, nbytes, {"prev_send": send, "prev_ghost": ghost}
+
+
+class SparseDeltaExchange(ExchangeStrategy):
+    """True sparse delta all-to-all over a ppermute route plan.
+
+    Per round, each part packs the ``(send-slot-id, color)`` pairs of
+    boundary vertices whose color changed since the previous round into a
+    fixed-capacity count-prefixed buffer per destination (capacity = send
+    width ``S``, so the shape is static) and ships each buffer
+    point-to-point: one ``lax.ppermute`` per phase of the edge-colored
+    route plan built by :func:`repro.core.a2a_schedule.exchange_route_plan`
+    from the static owner→ghoster traffic graph.  Receivers scatter the
+    pairs into a per-owner slot table (``ghost_tab[owner, slot]`` = last
+    color heard) and gather ghosts from it, so the reconstruction is
+    exact: identical colorings and round counts to ``all_gather``.
+
+    Loop-carried state: the previous send buffer plus the per-peer slot
+    tables — the buffers flow through ``_make_loop``'s carry like any
+    other exchange state.  Measured bytes are the count-prefixed payload
+    actually moved (``1 + 2·count`` words per routed edge), averaged per
+    device.
+
+    ``scatter`` selects how received pairs are applied: the jnp
+    ``reference`` scatter or the ``pallas`` ``pair_scatter`` kernel.
+    """
+
+    name = "sparse_delta"
+
+    def __init__(self, *, scatter: str = "reference"):
+        self.scatter = scatter
+        self._plan = None
+        self._traffic = None
+
+    def prepare(self, pg, st):
+        from repro.core.a2a_schedule import exchange_route_plan
+        from repro.graph.csr import SENTINEL
+
+        p_, s_ = pg.n_parts, pg.send_width
+        # need[owner, dest, slot]: dest ghosts the owner's send slot.
+        need = np.zeros((p_, p_, s_), dtype=bool)
+        for q in range(p_):
+            real = pg.ghost_gid[q] != SENTINEL
+            need[pg.ghost_part[q][real], q, pg.ghost_slot[q][real]] = True
+        traffic = need.any(axis=2)
+        self._plan = exchange_route_plan(traffic.astype(np.int64))
+        self._traffic = traffic
+        return {"peer_need": need}
+
+    def init_state(self, st):
+        if "peer_need" not in st:
+            raise ValueError(
+                "sparse_delta needs its prepare() tables; run it through "
+                "color_distributed (or call prepare(pg, st) first)"
+            )
+        return {
+            "prev_send": jnp.zeros(st["send_idx"].shape, COLOR_DTYPE),
+            # Per-peer slot tables: device (P, S) = owner-major; stacked
+            # (P, P, S) = receiver-major — both match peer_need's shape.
+            "ghost_tab": jnp.zeros(st["peer_need"].shape, COLOR_DTYPE),
+        }
+
+    def device(self, st, colors_loc, state, *, axis, n_parts):
+        plan, s = self._plan, st["send_idx"].shape[0]
+        p = jax.lax.axis_index(axis)
+        send = send_buffer(colors_loc, st)
+        changed = st["send_mask"] & (send != state["prev_send"])
+        # Pack one fixed-capacity buffer per destination: (P, S) each.
+        take = changed[None, :] & st["peer_need"]
+        slots, colors, counts = jax.vmap(pack_pairs, in_axes=(0, None))(
+            take, send
+        )
+        # Measured payload: count word + (slot, color) per pair, for every
+        # routed edge; global total averaged per device (replicated).
+        traffic_row = jnp.asarray(self._traffic)[p]               # (P,)
+        words = jnp.where(traffic_row, 1 + 2 * counts, 0).sum()
+        nbytes = payload_bytes(st, words=jax.lax.psum(words, axis)) // n_parts
+
+        ghost_tab = state["ghost_tab"]                            # (P, S)
+        arange_s = jnp.arange(s)
+        for k, phase in enumerate(plan.phases):
+            dst = jnp.asarray(plan.dst_of[k])[p]                  # -1 = idle
+            src = jnp.asarray(plan.src_of[k])[p]
+            d = jnp.clip(dst, 0, n_parts - 1)
+            buf = jnp.concatenate([counts[d][None], slots[d], colors[d]])
+            buf = jnp.where(dst >= 0, buf, 0)                     # idle sends 0
+            rbuf = jax.lax.ppermute(buf, axis, list(phase))
+            r_count, r_slots, r_colors = rbuf[0], rbuf[1:1 + s], rbuf[1 + s:]
+            valid = (arange_s < r_count) & (src >= 0)
+            idx = jnp.where(valid, r_slots, s)                    # pad -> drop
+            o = jnp.clip(src, 0, n_parts - 1)
+            row = apply_pairs(ghost_tab[o], idx, r_colors,
+                              scatter=self.scatter)
+            ghost_tab = ghost_tab.at[o].set(
+                jnp.where(src >= 0, row, ghost_tab[o]))
+        ghost = ghost_tab[st["ghost_part"], st["ghost_slot"]]
+        ghost = jnp.where(st["ghost_real"], ghost, 0)
+        return ghost, nbytes, {"prev_send": send, "ghost_tab": ghost_tab}
+
+    def stacked(self, st, colors, state):
+        p_, s = st["send_idx"].shape
+        send = jax.vmap(send_buffer)(colors, st)                  # (P, S)
+        changed = st["send_mask"] & (send != state["prev_send"])
+        take = changed[:, None, :] & st["peer_need"]              # (P, P, S)
+        slots, cols, counts = jax.vmap(
+            lambda t_rows, s_row: jax.vmap(pack_pairs, in_axes=(0, None))(
+                t_rows, s_row)
+        )(take, send)                                             # [owner, dest]
+        traffic = jnp.asarray(self._traffic)
+        words = jnp.where(traffic, 1 + 2 * counts, 0).sum()
+        nbytes = payload_bytes(st, words=words) // p_
+
+        # Receiver view: ghost_tab[r, o] patched with the pairs o -> r.
+        sl_t = jnp.swapaxes(slots, 0, 1)
+        co_t = jnp.swapaxes(cols, 0, 1)
+        cn_t = jnp.swapaxes(counts, 0, 1)
+        live = jnp.swapaxes(traffic, 0, 1)
+        valid = (jnp.arange(s)[None, None, :] < cn_t[..., None]) & live[..., None]
+        idx = jnp.where(valid, sl_t, s)
+        apply2 = jax.vmap(jax.vmap(
+            lambda tab, ix, co: apply_pairs(tab, ix, co, scatter=self.scatter)))
+        ghost_tab = apply2(state["ghost_tab"], idx, co_t)         # (P, P, S)
+        ghost = jax.vmap(
+            lambda tab, gp, gs, real: jnp.where(real, tab[gp, gs], 0)
+        )(ghost_tab, st["ghost_part"], st["ghost_slot"], st["ghost_real"])
+        return ghost, nbytes, {"prev_send": send, "ghost_tab": ghost_tab}
 
 
 EXCHANGES: dict[str, type[ExchangeStrategy]] = {
     "all_gather": AllGatherExchange,
     "halo": HaloExchange,
     "delta": DeltaExchange,
+    "sparse_delta": SparseDeltaExchange,
 }
 
 

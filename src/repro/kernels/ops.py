@@ -23,6 +23,7 @@ from repro.core.local import pick_color
 from repro.kernels.conflict import conflict_detect
 from repro.kernels.d2_forbidden import d2_forbidden
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.scatter import pair_scatter
 from repro.kernels.vb_bit import vb_bit_assign
 
 __all__ = [
@@ -30,6 +31,7 @@ __all__ = [
     "conflict_detect",
     "d2_forbidden",
     "flash_attention",
+    "pair_scatter",
     "local_color_d1_pallas",
     "local_color_d2_pallas",
     "d2_assign_pallas",

@@ -65,6 +65,12 @@ def d2_forbidden_ref(adj_cidx, base, active, colors, color_tab, ext_adj_cidx,
     return forbidden_mask(all_colors, base_eff)
 
 
+def pair_scatter_ref(table, slots, values):
+    """Oracle for kernels.scatter.pair_scatter (drop out-of-range slots)."""
+    return table.astype(jnp.int32).at[slots].set(
+        values.astype(jnp.int32), mode="drop")
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Oracle for kernels.flash_attention (dense fp32 attention)."""
     from repro.models.layers import _gqa_out, _gqa_scores, _mask_bias

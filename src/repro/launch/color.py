@@ -2,15 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.color --graph hex:24,24,24 \
       --parts 8 --problem d1 [--no-recolor-degrees] [--backend pallas] \
-      [--exchange halo|delta] [--baseline]
+      [--exchange halo|delta|sparse_delta] [--baseline]
 
 Graph specs: hex:NX,NY,NZ | grid:NX,NY | rmat:SCALE,EF | rgg:N,R |
 myc:K | er:N,DEG | bip:ROWS,COLS,NNZ
 
 --backend selects the local-compute backend (reference jnp path or the
 Pallas kernels); --exchange the ghost-exchange strategy, where ``delta``
-ships only boundary colors that changed since the previous round and the
-reported comm/round is the measured payload.
+ships only boundary colors that changed since the previous round and
+``sparse_delta`` routes them as count-prefixed (slot, color) pairs over
+edge-colored ppermute phases — for both, the reported comm/round is the
+measured payload.
 """
 from __future__ import annotations
 
@@ -57,7 +59,7 @@ def main() -> None:
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"])
     ap.add_argument("--exchange", default="all_gather",
-                    choices=["all_gather", "halo", "delta"])
+                    choices=["all_gather", "halo", "delta", "sparse_delta"])
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "shard_map", "simulate"])
     ap.add_argument("--no-recolor-degrees", action="store_true")

@@ -3,7 +3,11 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.a2a_schedule import phase_lower_bound, schedule_a2a
+from repro.core.a2a_schedule import (
+    exchange_route_plan,
+    phase_lower_bound,
+    schedule_a2a,
+)
 
 
 def test_full_a2a_near_optimal():
@@ -37,3 +41,34 @@ def test_schedule_is_contention_free(p, density, seed):
     assert scheduled == want
     if want:
         assert len(phases) <= 2 * phase_lower_bound(t)  # Vizing-ish band
+
+
+@given(p=st.integers(1, 10), density=st.floats(0.1, 1.0),
+       seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_exchange_route_plan_tables(p, density, seed):
+    """The dst_of/src_of tables the sparse_delta exchange indexes by
+    axis_index are exactly the scheduled phases: every traffic edge routed
+    once, idle parts marked -1, send and receive views consistent."""
+    rng = np.random.default_rng(seed)
+    t = (rng.random((p, p)) < density).astype(float)
+    np.fill_diagonal(t, 0)
+    plan = exchange_route_plan(t)
+    assert plan.n_parts == p
+    assert plan.dst_of.shape == plan.src_of.shape == (plan.n_phases, p)
+    want = {(int(s), int(d)) for s, d in zip(*np.nonzero(t))}
+    assert plan.edges == want
+    routed = set()
+    for k, phase in enumerate(plan.phases):
+        senders = {s for s, _ in phase}
+        receivers = {d for _, d in phase}
+        for s, d in phase:
+            assert plan.dst_of[k, s] == d
+            assert plan.src_of[k, d] == s
+            routed.add((s, d))
+        for q in range(p):
+            if q not in senders:
+                assert plan.dst_of[k, q] == -1
+            if q not in receivers:
+                assert plan.src_of[k, q] == -1
+    assert routed == want

@@ -88,6 +88,39 @@ def test_vb_bit_property(n, w, seed):
     assert not (clash.any(axis=1) & newly).any()
 
 
+@pytest.mark.parametrize("n,c", [(16, 5), (100, 100), (257, 64), (512, 1)])
+@pytest.mark.parametrize("tile", [64, 256])
+def test_pair_scatter_sweep(n, c, tile):
+    rng = np.random.default_rng(n + c + tile)
+    table = rng.integers(0, 99, n).astype(np.int32)
+    k = int(rng.integers(0, min(n, c) + 1))
+    slots = np.full(c, n, np.int32)          # pad sentinel = table length
+    slots[:k] = rng.permutation(n)[:k]
+    vals = rng.integers(1, 50, c).astype(np.int32)
+    got = ops.pair_scatter(jnp.asarray(table), jnp.asarray(slots),
+                           jnp.asarray(vals), tile=tile)
+    want = ref.pair_scatter_ref(jnp.asarray(table), jnp.asarray(slots),
+                                jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(n=st.integers(4, 200), c=st.integers(1, 64), seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_pair_scatter_property(n, c, seed):
+    """Pairs land, pads drop, untouched slots keep their value."""
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 99, n).astype(np.int32)
+    k = int(rng.integers(0, min(n, c) + 1))
+    slots = np.full(c, n, np.int32)
+    slots[:k] = rng.permutation(n)[:k]
+    vals = rng.integers(1, 50, c).astype(np.int32)
+    got = np.asarray(ops.pair_scatter(
+        jnp.asarray(table), jnp.asarray(slots), jnp.asarray(vals), tile=64))
+    want = table.copy()
+    want[slots[:k]] = vals[:k]
+    np.testing.assert_array_equal(got, want)
+
+
 def test_pallas_local_color_matches_core():
     from repro.core.distributed import build_device_state
     from repro.core.local import local_color_d1

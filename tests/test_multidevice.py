@@ -69,7 +69,7 @@ g = hex_mesh(24, 8, 8)
 pg = partition_graph(g, 8, second_layer=True)   # block slabs -> halo-legal
 ref = color_distributed(pg, problem="d1", engine="simulate")
 for backend in ("reference", "pallas"):
-    for exchange in ("all_gather", "halo", "delta"):
+    for exchange in ("all_gather", "halo", "delta", "sparse_delta"):
         res = color_distributed(pg, problem="d1", engine="shard_map",
                                 backend=backend, exchange=exchange)
         assert res.converged, (backend, exchange)
@@ -77,7 +77,9 @@ for backend in ("reference", "pallas"):
         assert res.rounds == ref.rounds, (backend, exchange)
 assert is_proper_d1(g, ref.colors)
 
-# Measured accounting: delta < all_gather per round after round 1.
+# Measured accounting: delta < all_gather per round after round 1, and
+# sparse_delta's pair payload (the bytes the ppermute rounds actually
+# move) beats all_gather in total and matches the simulate engine exactly.
 ag = color_distributed(pg, problem="d1", engine="shard_map")
 de = color_distributed(pg, problem="d1", engine="shard_map", exchange="delta")
 assert ag.rounds >= 1
@@ -85,14 +87,23 @@ assert len(de.comm_bytes_by_round) == de.rounds + 1
 assert all(d < a for d, a in zip(de.comm_bytes_by_round[1:],
                                  ag.comm_bytes_by_round[1:]))
 assert de.comm_bytes_total < ag.comm_bytes_total
+sd = color_distributed(pg, problem="d1", engine="shard_map",
+                       exchange="sparse_delta")
+sd_sim = color_distributed(pg, problem="d1", engine="simulate",
+                           exchange="sparse_delta")
+assert (sd.colors == ref.colors).all() and sd.rounds == ref.rounds
+assert sd.comm_bytes_total < ag.comm_bytes_total
+assert list(sd.comm_bytes_by_round) == list(sd_sim.comm_bytes_by_round)
 
-# Pallas backend round-trips d2 through shard_map too.
-d2_ref = color_distributed(pg, problem="d2", engine="simulate")
-d2_pal = color_distributed(pg, problem="d2", engine="shard_map",
-                           backend="pallas", exchange="delta")
-assert (d2_ref.colors == d2_pal.colors).all()
-assert d2_ref.rounds == d2_pal.rounds
-assert is_proper_d2(g, d2_pal.colors)
+# Pallas backend round-trips d2/pd2 through shard_map + sparse a2a too.
+for problem in ("d2", "pd2"):
+    p_ref = color_distributed(pg, problem=problem, engine="simulate")
+    p_pal = color_distributed(pg, problem=problem, engine="shard_map",
+                              backend="pallas", exchange="sparse_delta")
+    assert (p_ref.colors == p_pal.colors).all(), problem
+    assert p_ref.rounds == p_pal.rounds, problem
+    if problem == "d2":
+        assert is_proper_d2(g, p_pal.colors)
 print("OK")
 """)
     assert "OK" in out
