@@ -1,0 +1,80 @@
+"""Timestep recoloring: plan-cache warm path vs cold `color_distributed`.
+
+The paper's motivating workload (and Sarıyüce et al.'s iterative
+recoloring): the same mesh topology is recolored T times.  Each row
+colors one topology T=16 times two ways —
+
+* **cold** — T independent ``color_distributed(..., cache=False)`` calls,
+  each paying host state build + exchange prepare + trace + compile;
+* **warm** — T requests through one :class:`ColoringService` (plan built
+  and compiled once; requests feed only dynamic inputs).
+
+``derived`` reports end-to-end cold vs service milliseconds, the
+cold-first/warm-mean split, and the amortized speedup.  Colorings are
+asserted bit-identical between the two paths, and the service's
+end-to-end total is asserted strictly faster than the cold path — the
+ISSUE-3 acceptance criterion, checked on every run (CI runs the toy
+variant as suite ``recolor_smoke``).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core.distributed import color_distributed
+from repro.graph.generators import hex_mesh
+from repro.graph.partition import partition_graph
+from repro.serve.coloring import ColoringService
+
+T = 16
+
+
+def _timesteps(pg, problem: str, exchange: str) -> tuple[str, float]:
+    cold_res = []
+    t0 = time.perf_counter()
+    for _ in range(T):
+        cold_res.append(color_distributed(
+            pg, problem=problem, exchange=exchange, engine="simulate",
+            cache=False))
+    cold_s = time.perf_counter() - t0
+
+    svc = ColoringService(pg, problem=problem, exchange=exchange,
+                          engine="simulate", cache=False)
+    t0 = time.perf_counter()
+    warm_res = [svc.submit() for _ in range(T)]
+    svc_s = time.perf_counter() - t0
+
+    for c, w in zip(cold_res, warm_res):
+        assert (c.colors == w.colors).all(), "warm path diverged from cold"
+        assert c.rounds == w.rounds
+    # ISSUE-3 acceptance: T timesteps through the service beat T cold calls.
+    assert svc_s < cold_s, (
+        f"plan warm path not faster: service {svc_s:.2f}s vs cold {cold_s:.2f}s")
+
+    r = warm_res[0]
+    derived = (
+        f"T={T};colors={r.n_colors};rounds={r.rounds};"
+        f"cold_total_ms={cold_s * 1e3:.0f};service_total_ms={svc_s * 1e3:.0f};"
+        f"cold_first_ms={svc.stats.cold_ms:.1f};"
+        f"warm_mean_ms={svc.stats.warm_ms_mean:.1f};"
+        f"amortized_speedup={cold_s / svc_s:.1f}"
+    )
+    return derived, svc.stats.warm_ms_mean * 1e3   # us per warm call
+
+
+def run(toy: bool = False) -> list[str]:
+    g = (hex_mesh(8, 6, 6, name="hex_toy") if toy
+         else hex_mesh(16, 12, 12, name="hex_mesh"))
+    parts = 4 if toy else 8
+    configs = [("d1", "all_gather"), ("d1", "sparse_delta"),
+               ("d2", "all_gather")]
+    if not toy:
+        configs += [("d2", "sparse_delta"), ("pd2", "delta")]
+    rows = []
+    for problem, exchange in configs:
+        pg = partition_graph(g, parts, strategy="block",
+                             second_layer=problem != "d1")
+        derived, us = _timesteps(pg, problem, exchange)
+        rows.append(row(
+            f"recolor/{g.name}/p{parts}/{problem}/{exchange}", us, derived))
+    return rows

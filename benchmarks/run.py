@@ -2,10 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a
-exchange_smoke]``.  ``--json PATH`` additionally writes the rows as a
-JSON list of ``{name, us_per_call, derived}`` records — CI's bench-smoke
-job runs ``exchange_smoke`` (the fig3 exchange sweep at toy sizes) and
-uploads that file as the per-PR comm-bytes artifact.
+recolor exchange_smoke recolor_smoke]``.  ``--json PATH`` additionally
+writes the rows as a JSON list of ``{name, us_per_call, derived}``
+records — CI's bench-smoke job runs ``exchange_smoke`` (the fig3
+exchange sweep at toy sizes) and uploads that file as the per-PR
+comm-bytes artifact; the serve-smoke job runs ``recolor_smoke`` (the
+timestep-recoloring bench at toy sizes) and uploads the cold-vs-warm
+latency artifact.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from benchmarks import (
     bench_kernels,
     bench_moe_a2a,
     bench_pd2,
+    bench_recolor_timesteps,
     bench_weak_scaling,
 )
 
@@ -34,7 +38,9 @@ SUITES = {
     "fig11": lambda: bench_pd2.run(),
     "kernels": lambda: bench_kernels.run(),
     "a2a": lambda: bench_moe_a2a.run(),
+    "recolor": lambda: bench_recolor_timesteps.run(),
     "exchange_smoke": lambda: bench_d1_scaling.run_exchange(toy=True),
+    "recolor_smoke": lambda: bench_recolor_timesteps.run(toy=True),
 }
 
 
@@ -52,7 +58,7 @@ def main() -> None:
             raise SystemExit("usage: benchmarks.run [suites...] --json PATH")
         json_path = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
-    which = argv or [k for k in SUITES if k != "exchange_smoke"]
+    which = argv or [k for k in SUITES if not k.endswith("_smoke")]
     records = []
     print("name,us_per_call,derived")
     for key in which:

@@ -3,6 +3,8 @@
 Public API:
   - color_distributed: D1 / D1-2GL / D2 / PD2 over a device mesh (shard_map)
   - color_single_device: single-device speculate&iterate (quality baseline)
+  - plan: compile-once ColoringPlan / keyed LRU PlanCache (get_plan) — the
+    static half built once per topology, warm runs feed only dynamic inputs
   - backend: pluggable local-compute backends ("reference" jnp / "pallas")
   - exchange: pluggable ghost-exchange strategies (all_gather / halo / delta)
   - greedy: serial greedy oracle (Alg. 1)
@@ -34,6 +36,14 @@ from repro.core.exchange import (
     register_exchange,
 )
 from repro.core.distributed import ColoringResult, color_distributed, color_single_device
+from repro.core.plan import (
+    ColoringPlan,
+    PlanCache,
+    PlanKey,
+    build_plan,
+    default_plan_cache,
+    get_plan,
+)
 
 __all__ = [
     "greedy_d1",
@@ -48,6 +58,12 @@ __all__ = [
     "color_distributed",
     "color_single_device",
     "ColoringResult",
+    "ColoringPlan",
+    "PlanCache",
+    "PlanKey",
+    "build_plan",
+    "get_plan",
+    "default_plan_cache",
     "LocalBackend",
     "ReferenceBackend",
     "PallasBackend",

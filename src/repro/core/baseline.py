@@ -21,9 +21,10 @@ from repro.core.distributed import (
     _detect_part,
     _gather_colors,
     _recolor_part,
-    _send_buffer,
-    build_device_state,
 )
+from repro.core.exchange import send_buffer
+from repro.core.plan import cached_device_state
+from repro.core.validate import num_colors
 from repro.graph.partition import PartitionedGraph
 
 __all__ = ["color_baseline"]
@@ -42,7 +43,9 @@ def color_baseline(
     ``recolor_degrees=False`` matches Zoltan's first-fit conflict rule
     (random/GID tiebreaks only).
     """
-    st_np = build_device_state(pg, problem)
+    # Routed through the plan layer's host-state cache: repeated baseline
+    # runs (and main-runtime plans) on one topology share the tables.
+    st_np = cached_device_state(pg, problem)
     st = {k: jnp.asarray(v) for k, v in st_np.items()}
     recolor = jax.jit(jax.vmap(
         partial(_recolor_part, problem=problem, recolor_degrees=recolor_degrees)
@@ -50,7 +53,7 @@ def color_baseline(
     detect = jax.jit(jax.vmap(
         partial(_detect_part, problem=problem, recolor_degrees=recolor_degrees)
     ))
-    sendbuf = jax.vmap(_send_buffer)
+    sendbuf = jax.vmap(send_buffer)
 
     @jax.jit
     def exchange(colors):
@@ -99,13 +102,11 @@ def color_baseline(
         rounds += 1
 
     gathered = _gather_colors(pg, np.asarray(colors))
-    from repro.core.validate import num_colors as _nc
-
     return ColoringResult(
         colors=gathered,
         rounds=rounds,
         converged=bool(conf_g == 0),
-        n_colors=_nc(gathered),
+        n_colors=num_colors(gathered),
         total_conflicts=total,
         comm_bytes_per_round=P * pg.send_width * 4,
         problem=f"{problem}-baseline",

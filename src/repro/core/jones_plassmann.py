@@ -10,20 +10,16 @@ rounds vs the speculative loop's 1–8 (bench fig2 rows ``jp``).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conflict import gid_hash
-from repro.core.distributed import (
-    ColoringResult,
-    _gather_colors,
-    _send_buffer,
-    build_device_state,
-)
+from repro.core.distributed import ColoringResult, _gather_colors
+from repro.core.exchange import send_buffer
 from repro.core.local import forbidden_mask, pick_color
+from repro.core.plan import cached_device_state
+from repro.core.validate import num_colors
 from repro.graph.partition import PartitionedGraph
 
 __all__ = ["color_jones_plassmann"]
@@ -65,10 +61,10 @@ def _jp_round(st, colors_loc, ghost_colors, base):
 
 def color_jones_plassmann(pg: PartitionedGraph, *, max_rounds: int = 4096) -> ColoringResult:
     """Distributed JP over the simulate engine (vmap over parts)."""
-    st_np = build_device_state(pg, "d1")
+    st_np = cached_device_state(pg, "d1")   # plan-layer host-state cache
     st = {k: jnp.asarray(v) for k, v in st_np.items()}
     step = jax.jit(jax.vmap(_jp_round))
-    sendbuf = jax.vmap(_send_buffer)
+    sendbuf = jax.vmap(send_buffer)
 
     @jax.jit
     def exchange(colors):
@@ -90,13 +86,11 @@ def color_jones_plassmann(pg: PartitionedGraph, *, max_rounds: int = 4096) -> Co
         if done >= active_total:
             break
     gathered = _gather_colors(pg, np.asarray(colors))
-    from repro.core.validate import num_colors as _nc
-
     return ColoringResult(
         colors=gathered,
         rounds=rounds,
         converged=bool(done >= active_total),
-        n_colors=_nc(gathered),
+        n_colors=num_colors(gathered),
         total_conflicts=0,          # JP is conflict-free by construction
         comm_bytes_per_round=P * pg.send_width * 4,
         problem="d1-jp",

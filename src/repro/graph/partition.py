@@ -23,6 +23,7 @@ counts balanced — the XtraPuLP objective in 1D), ``random`` (stress test).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -87,6 +88,41 @@ class PartitionedGraph:
             if not owners <= {p - 1, p + 1}:
                 return False
         return True
+
+    @property
+    def signature(self) -> str:
+        """Content hash of the partitioned topology (plan-cache key).
+
+        Two :class:`PartitionedGraph` objects with identical structural
+        tables hash identically, so a plan compiled for one serves
+        recoloring requests against the other (the repeated-coloring
+        workload: same mesh every timestep).  The cosmetic ``name`` is
+        excluded.  Computed once and memoized on the instance.
+        """
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(
+                f"{self.n_global},{self.n_parts},{self.n_local},"
+                f"{self.ell_width},{int(self.has_second_layer)}".encode()
+            )
+            arrays = [
+                self.vertex_gid, self.deg, self.is_boundary, self.adj_cidx,
+                self.ghost_gid, self.ghost_deg, self.ghost_part,
+                self.ghost_slot, self.ghost_is_l1, self.send_idx,
+                self.send_mask,
+            ]
+            if self.ghost_adj_cidx is not None:
+                arrays.append(self.ghost_adj_cidx)
+            for arr in arrays:
+                # Frame each array with shape+dtype so the byte stream is
+                # prefix-free: topologies whose tables differ only in
+                # widths cannot alias to one plan-cache key.
+                h.update(f"|{arr.shape}{arr.dtype}|".encode())
+                h.update(np.ascontiguousarray(arr).tobytes())
+            sig = h.hexdigest()
+            object.__setattr__(self, "_signature", sig)
+        return sig
 
 
 def _split_points(graph: Graph, n_parts: int, strategy: str, seed: int) -> tuple[np.ndarray, np.ndarray]:
@@ -188,12 +224,13 @@ def partition_graph(
     send_width = max(max((len(s) for s in send_sets), default=0), 1)
     send_idx = np.zeros((n_parts, send_width), dtype=np.int32)
     send_mask = np.zeros((n_parts, send_width), dtype=bool)
-    slot_of: dict[int, int] = {}
+    # gid -> slot in its owner's send buffer (send sets are disjoint by
+    # owner, so one flat table replaces a per-ghost dict lookup).
+    slot_of = np.zeros(n, dtype=np.int32)
     for q, s in enumerate(send_sets):
         send_idx[q, : len(s)] = local_ix[s]
         send_mask[q, : len(s)] = True
-        for j, gid in enumerate(s):
-            slot_of[int(gid)] = j
+        slot_of[s] = np.arange(len(s), dtype=np.int32)
 
     # --- Pass 3: ghost tables + color-index translation ------------------
     n_ghost = max(
@@ -224,7 +261,7 @@ def partition_graph(
         if g:
             ghost_deg[p, :g] = degrees[ghosts]
             ghost_part[p, :g] = owner[ghosts]
-            ghost_slot[p, :g] = np.array([slot_of[int(x)] for x in ghosts], np.int32)
+            ghost_slot[p, :g] = slot_of[ghosts]
         ghost_is_l1[p, : len(l1)] = True
         # gid -> color-table index for this part.
         cidx_of = np.full(n + 1, n_local + n_ghost, dtype=np.int32)

@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.color --graph hex:24,24,24 \
       --parts 8 --problem d1 [--no-recolor-degrees] [--backend pallas] \
-      [--exchange halo|delta|sparse_delta] [--baseline]
+      [--exchange halo|delta|sparse_delta] [--baseline] [--repeat 16]
 
 Graph specs: hex:NX,NY,NZ | grid:NX,NY | rmat:SCALE,EF | rgg:N,R |
 myc:K | er:N,DEG | bip:ROWS,COLS,NNZ
@@ -13,6 +13,12 @@ ships only boundary colors that changed since the previous round and
 ``sparse_delta`` routes them as count-prefixed (slot, color) pairs over
 edge-colored ppermute phases — for both, the reported comm/round is the
 measured payload.
+
+--repeat N is the timestep mode (the paper's motivating workload): the
+same topology is recolored N times through the compile-once plan cache
+(``repro.serve.ColoringService``); the cold first request (host state
+build + trace + compile) and the warm per-timestep latency are reported
+separately.
 """
 from __future__ import annotations
 
@@ -65,6 +71,9 @@ def main() -> None:
     ap.add_argument("--no-recolor-degrees", action="store_true")
     ap.add_argument("--baseline", action="store_true",
                     help="Bozdağ/Zoltan-style batched boundary coloring")
+    ap.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="timestep mode: recolor the topology N times "
+                         "through the plan cache, report cold vs warm ms")
     args = ap.parse_args()
 
     g = make_graph(args.graph)
@@ -80,6 +89,19 @@ def main() -> None:
                   "all_gather exchange; --backend/--exchange are ignored")
         res = color_baseline(pg, problem=args.problem,
                              recolor_degrees=not args.no_recolor_degrees)
+    elif args.repeat > 1:
+        from repro.serve.coloring import ColoringService
+
+        svc = ColoringService(
+            pg, problem=args.problem,
+            recolor_degrees=not args.no_recolor_degrees,
+            backend=args.backend, exchange=args.exchange, engine=args.engine)
+        for _ in range(args.repeat):
+            res = svc.submit()
+        print(f"[color] repeat={args.repeat} engine={svc.engine} "
+              f"cold_ms={svc.stats.cold_ms:.1f} (first timestep, incl. "
+              f"compile) warm_ms={svc.stats.warm_ms_mean:.2f} "
+              f"(mean of {svc.stats.warm_requests} warm timesteps)")
     else:
         res = color_distributed(
             pg, problem=args.problem,

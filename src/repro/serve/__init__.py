@@ -1,4 +1,5 @@
-"""Serving layer: batched prefill/decode steps over sharded caches."""
+"""Serving layer: token generation + batched graph-recoloring service."""
+from repro.serve.coloring import ColoringService, ServiceStats
 from repro.serve.engine import ServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "ColoringService", "ServiceStats"]

@@ -34,21 +34,37 @@ class ServeEngine:
         self.max_len = max_len
         self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
 
-    def generate(self, prompts: list[np.ndarray], max_new_tokens: int,
+    def generate(self, prompts: list[np.ndarray],
+                 max_new_tokens: int | list[int],
                  *, greedy: bool = True) -> list[list[int]]:
-        """Batch-generate; prompts padded to a common length bucket."""
-        assert len(prompts) <= self.batch
+        """Batch-generate; prompts padded to a common length bucket.
+
+        ``max_new_tokens`` is one shared budget or a per-request list.
+        Slot semantics: the decode loop runs to the *longest* budget (the
+        batch shares one jitted step), so slots whose budget is exhausted
+        keep decoding as batch padding — but their tokens are not emitted:
+        each request's output stops at its own ``max_new_tokens``.
+
+        Tokens cross the host boundary as one bulk device->host transfer
+        per decode step (not one per slot).
+        """
+        limits = ([max_new_tokens] * len(prompts)
+                  if isinstance(max_new_tokens, int) else list(max_new_tokens))
+        assert len(limits) == len(prompts) <= self.batch
+        steps = max(limits)
         lp = max(len(p) for p in prompts)
         toks = np.zeros((self.batch, lp), np.int32)
         for i, p in enumerate(prompts):
             toks[i, lp - len(p):] = p  # left-pad into the bucket
         logits, cache = prefill(
-            self.params, self.cfg, jnp.asarray(toks), max_len=lp + max_new_tokens)
+            self.params, self.cfg, jnp.asarray(toks), max_len=lp + steps)
         outs: list[list[int]] = [[] for _ in prompts]
         cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        for _ in range(max_new_tokens):
-            for i in range(len(prompts)):
-                outs[i].append(int(cur[i, 0]))
+        for t in range(steps):
+            step_toks = np.asarray(cur)[:, 0]
+            for i, lim in enumerate(limits):
+                if t < lim:
+                    outs[i].append(int(step_toks[i]))
             logits, cache = self._decode(self.params, cur, cache)
             cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         return outs

@@ -114,6 +114,7 @@ def test_interior_never_recolored():
     from functools import partial
     import jax
     from repro.core import distributed as D
+    from repro.core.exchange import send_buffer
 
     g = hex_mesh(10, 6, 6)
     pg = partition_graph(g, 4)
@@ -121,7 +122,7 @@ def test_interior_never_recolored():
     st = {k: jnp.asarray(v) for k, v in st_np.items()}
     recolor = jax.vmap(partial(D._recolor_part, problem="d1", recolor_degrees=True))
     detect = jax.vmap(partial(D._detect_part, problem="d1", recolor_degrees=True))
-    sendbuf = jax.vmap(D._send_buffer)
+    sendbuf = jax.vmap(send_buffer)
     P_, G = st_np["ghost_part"].shape
     colors = recolor(st, jnp.zeros((P_, pg.n_local), jnp.int32),
                      jnp.zeros((P_, G), jnp.int32), st["active0"],

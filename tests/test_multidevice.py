@@ -109,6 +109,58 @@ print("OK")
     assert "OK" in out
 
 
+def test_plan_warm_path_shard_map():
+    """Compile-once plans through the shard_map engine: warm runs are
+    bit-identical to the simulate engine and to cold calls, retrace
+    nothing, and the recoloring service's sequential warm path works."""
+    out = run_py("""
+import numpy as np
+from repro.graph.generators import hex_mesh
+from repro.graph.partition import partition_graph
+from repro.core.distributed import color_distributed
+from repro.core.plan import PlanCache, get_plan
+from repro.core import plan as plan_mod
+from repro.serve.coloring import ColoringService
+from repro.core.validate import is_proper_d1
+
+g = hex_mesh(24, 8, 8)
+pg = partition_graph(g, 8, second_layer=True)
+cache = PlanCache()
+combos = (("d1", "all_gather"), ("d1", "sparse_delta"), ("d2", "delta"))
+plans, firsts, sims = {}, {}, {}
+for problem, exchange in combos:
+    plan = get_plan(pg, problem=problem, exchange=exchange,
+                    engine="shard_map", cache=cache)
+    assert plan.key.engine == "shard_map"
+    plans[problem, exchange] = plan
+    firsts[problem, exchange] = plan.run()
+    sims[problem, exchange] = color_distributed(
+        pg, problem=problem, exchange=exchange, engine="simulate",
+        cache=False)
+assert cache.misses == 3 and len(cache) == 3
+
+plan_mod.build_device_state = None       # any warm rebuild would now crash
+for combo, plan in plans.items():
+    traces = plan.stats.traces
+    warm = plan.run()
+    assert plan.stats.traces == traces, combo   # zero retraces
+    assert (firsts[combo].colors == warm.colors).all()
+    sim = sims[combo]
+    assert (warm.colors == sim.colors).all(), combo
+    assert warm.rounds == sim.rounds
+    assert list(warm.comm_bytes_by_round) == list(sim.comm_bytes_by_round)
+
+# The service's shard_map path is sequential warm-path execution.
+svc = ColoringService(pg, problem="d1", engine="shard_map", cache=cache)
+outs = svc.run_batch([{}, {"color_mask": np.arange(g.n) % 2 == 0}, {}])
+assert (outs[0].colors == outs[2].colors).all()
+assert is_proper_d1(g, outs[0].colors)
+assert svc.stats.requests == 3
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_sharded_train_two_axis_mesh():
     out = run_py("""
 import jax

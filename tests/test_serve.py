@@ -33,3 +33,20 @@ def test_engine_batches_requests():
     assert len(outs) == 3 and all(len(o) == 4 for o in outs)
     # Identical prompts -> identical continuations.
     assert outs[0] == outs[1] == outs[2]
+
+
+def test_engine_per_request_token_budgets():
+    """Per-request max_new_tokens: each slot's output stops at its own
+    budget, and every emitted prefix matches the shared-budget run."""
+    cfg = get_smoke("qwen3_32b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, batch=4, max_len=64)
+    prompts = [np.arange(3, dtype=np.int32),
+               np.arange(1, 4, dtype=np.int32),
+               np.arange(2, 5, dtype=np.int32)]
+    shared = eng.generate(prompts, max_new_tokens=5)
+    limits = [5, 2, 0]
+    capped = eng.generate(prompts, max_new_tokens=limits)
+    assert [len(o) for o in capped] == limits
+    for full, cut, lim in zip(shared, capped, limits):
+        assert cut == full[:lim]
