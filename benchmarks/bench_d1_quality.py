@@ -35,7 +35,7 @@ def run(scale: str = "small") -> list[str]:
             assert is_proper_d1(g, res.colors), (g.name, name)
             rows.append(row(f"fig2/{g.name}/{name}", us,
                             f"colors={res.n_colors};rounds={res.rounds}"))
-        _, us = timed(lambda: greedy_d1(g))
+        gcolors, us = timed(lambda: greedy_d1(g))
         rows.append(row(f"fig2/{g.name}/serial_greedy", us,
-                        f"colors={num_colors(greedy_d1(g))};rounds=0"))
+                        f"colors={num_colors(gcolors)};rounds=0"))
     return rows

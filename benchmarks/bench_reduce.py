@@ -1,0 +1,85 @@
+"""Quality axis: colors-vs-passes for the color-reduction subsystem.
+
+The paper evaluates every approach on both runtime *and* colors used
+(Fig. 2/5/6); Sarıyüce et al. show iterative recoloring passes buy color
+quality for extra communication.  Each row runs ``reduce_colors`` over a
+finished distributed coloring and reports the measured tradeoff:
+
+* ``derived`` carries the colors-by-pass trajectory (``12>10>9``), the
+  per-pass measured exchange payload (``comm=a+b``), and the balance
+  metrics of the final coloring;
+* ``us_per_call`` is the end-to-end reduction wall time over the warm
+  plan (supersteps are conflict-free, so each costs one exchange).
+
+Suites: ``quality`` (paper-suite ``small``: d1 across the full suite +
+an order sweep, d2/pd2 on the Fig. 7/11-style lighter inputs) and
+``quality_smoke`` (CI: the ``tiny`` suite).  Properness and the
+never-increase guarantee are asserted on every row.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core.plan import get_plan
+from repro.core.quality import quality_report, trajectory
+from repro.core.reduce import reduce_colors
+from repro.core.validate import is_proper_d1, is_proper_d2, is_proper_pd2
+from repro.graph.generators import (
+    bipartite_random,
+    hex_mesh,
+    paper_suite,
+    random_geometric,
+    rmat,
+)
+from repro.graph.partition import partition_graph
+
+VALIDATORS = {"d1": is_proper_d1, "d1_2gl": is_proper_d1,
+              "d2": is_proper_d2, "pd2": is_proper_pd2}
+
+
+def _reduce_row(g, parts, problem, order, passes, *, exchange="all_gather",
+                strategy="edge_balanced") -> str:
+    pg = partition_graph(g, parts, strategy=strategy,
+                         second_layer=problem != "d1")
+    plan = get_plan(pg, problem=problem, exchange=exchange, engine="simulate")
+    res = plan.run()
+    t0 = time.perf_counter()
+    red = reduce_colors(plan, res, passes=passes, order=order)
+    us = (time.perf_counter() - t0) * 1e6
+    assert VALIDATORS[problem](g, red.colors), (g.name, problem, order)
+    assert red.n_colors <= red.initial_n_colors, (g.name, problem, order)
+    q = quality_report(red.colors)
+    derived = (f"passes={red.passes_run}/{passes};"
+               f"trajectory={trajectory(red.colors_by_pass, red.comm_bytes_by_pass)};"
+               f"{q.row()}")
+    return row(f"quality/{g.name}/p{parts}/{problem}/{order}", us, derived)
+
+
+def run(toy: bool = False) -> list[str]:
+    passes = 2 if toy else 4
+    parts = 4 if toy else 8
+    rows = []
+
+    # D1 across the paper suite (reverse order, the Culberson default).
+    for g in paper_suite("tiny" if toy else "small"):
+        rows.append(_reduce_row(g, parts, "d1", "reverse", passes))
+
+    # Order sweep on the skewed social graph: which classes to rebuild
+    # first is the knob the quality-vs-comm tradeoff turns on.
+    g = rmat(8, 8, seed=1, name="social_sweep") if toy \
+        else rmat(11, 16, seed=1, name="social_sweep")
+    for order in ("largest_first", "least_used_first"):
+        rows.append(_reduce_row(g, parts, "d1", order, passes))
+
+    # D2 / PD2 on the Fig. 7/11-style lighter inputs (two-hop tables on
+    # heavy-skew rmat are minutes-slow on one CPU core).
+    d2_graphs = ([hex_mesh(8, 6, 6, name="hex_d2")] if toy else
+                 [hex_mesh(16, 12, 12, name="bump_like"),
+                  random_geometric(3000, 0.025, seed=2, name="rgg_like")])
+    for g in d2_graphs:
+        rows.append(_reduce_row(g, parts, "d2", "reverse", passes))
+    bip = (bipartite_random(96, 64, 4, seed=3, name="bip_pd2") if toy
+           else bipartite_random(1024, 512, 8, seed=3, name="bip_pd2"))
+    rows.append(_reduce_row(bip, parts, "pd2", "reverse", passes))
+    return rows

@@ -7,11 +7,16 @@ Public API:
     static half built once per topology, warm runs feed only dynamic inputs
   - backend: pluggable local-compute backends ("reference" jnp / "pallas")
   - exchange: pluggable ghost-exchange strategies (all_gather / halo / delta)
+  - reduce: distributed iterative color reduction (Culberson-style class
+    rebuild over warm plans; pluggable orders) — the quality axis
+  - quality: color histograms, balance/skew metrics, trajectories
   - greedy: serial greedy oracle (Alg. 1)
   - validate: proper-coloring checkers
 """
 from repro.core.greedy import greedy_d1, greedy_d2, greedy_pd2
 from repro.core.validate import (
+    color_histogram,
+    is_balanced,
     is_proper_d1,
     is_proper_d2,
     is_proper_pd2,
@@ -43,6 +48,20 @@ from repro.core.plan import (
     build_plan,
     default_plan_cache,
     get_plan,
+)
+from repro.core.quality import (
+    QualityReport,
+    quality_report,
+)
+from repro.core.reduce import (
+    ORDERS,
+    ReduceKey,
+    ReductionPlan,
+    ReductionResult,
+    get_order,
+    get_reduce_plan,
+    reduce_colors,
+    register_order,
 )
 
 __all__ = [
@@ -77,4 +96,16 @@ __all__ = [
     "EXCHANGES",
     "get_exchange",
     "register_exchange",
+    "color_histogram",
+    "is_balanced",
+    "QualityReport",
+    "quality_report",
+    "ORDERS",
+    "ReduceKey",
+    "ReductionPlan",
+    "ReductionResult",
+    "get_order",
+    "get_reduce_plan",
+    "reduce_colors",
+    "register_order",
 ]

@@ -68,7 +68,9 @@ class ColoringResult:
     comm_bytes_total: int = 0   # sum of per-round measured payloads
     # (rounds+1,) measured payload per device for each exchange, starting
     # with the post-initial-coloring one.  None for runtimes that predate
-    # measured accounting (baseline / Jones-Plassmann).
+    # measured accounting (baseline / Jones-Plassmann) and for results
+    # merged across reduction passes (see ReductionResult.merged_result,
+    # which keeps the per-pass split instead).
     comm_bytes_by_round: np.ndarray | None = None
 
 
@@ -286,6 +288,8 @@ def color_distributed(
     mesh: jax.sharding.Mesh | None = None,
     color_mask: np.ndarray | None = None,
     cache=None,
+    reduce_passes: int = 0,
+    reduce_order: str = "reverse",
 ) -> ColoringResult:
     """Color a partitioned graph with the paper's distributed algorithm.
 
@@ -320,6 +324,14 @@ def color_distributed(
     fully cold plan for this call (fresh host state too).  Cached plans
     pin device state + executables until LRU-evicted; for sweeps over
     many large topologies use ``cache=False`` or clear the default cache.
+
+    reduce_passes / reduce_order: optional post-coloring quality pass —
+    run up to ``reduce_passes`` iterative color-reduction passes
+    (``repro.core.reduce``) over the finished coloring, rebuilding its
+    classes in ``reduce_order``.  The returned result folds the
+    reduction in: final colors, summed rounds and measured comm bytes.
+    Use :func:`repro.core.reduce.reduce_colors` directly for the full
+    colors-by-pass trajectory.
     """
     from repro.core import plan as plan_mod
 
@@ -328,7 +340,15 @@ def color_distributed(
         backend=backend, exchange=exchange, engine=engine,
         max_rounds=max_rounds, mesh=mesh, cache=cache,
     )
-    return plan.run(color_mask=color_mask)
+    res = plan.run(color_mask=color_mask)
+    if reduce_passes > 0:
+        from repro.core.reduce import reduce_colors
+
+        red = reduce_colors(plan, res, passes=reduce_passes,
+                            order=reduce_order, cache=cache,
+                            color_mask=color_mask)
+        res = red.merged_result(res)
+    return res
 
 
 def color_single_device(

@@ -13,10 +13,14 @@ module splits ``color_distributed`` into:
   ``(topology_signature, problem, recolor_degrees, backend, exchange,
   engine, max_rounds)``.
 * :meth:`ColoringPlan.run` — the **cheap dynamic half**: feeds only the
-  per-request inputs (active mask from ``color_mask``, initial colors,
-  seed) into the already-compiled program with a donated carry buffer.
-  Warm runs do zero host-side state rebuilds and zero retraces
-  (``plan.stats.traces`` is the probe the tests pin).
+  per-request inputs (active mask from ``color_mask``, initial colors
+  plus the ghost-color table ``ghost0`` gathered from them, seed) into
+  the already-compiled program with a donated carry buffer.  Warm runs
+  do zero host-side state rebuilds and zero retraces
+  (``plan.stats.traces`` is the probe the tests pin).  Because ``ghost0``
+  replicates ``colors0`` onto the ghost slots, a warm start sees frozen
+  cross-partition colors from the very first recolor — the property the
+  color-reduction subsystem (``repro.core.reduce``) builds on.
 
 :class:`PlanCache` is a keyed LRU over plans; the process-wide default
 cache makes every ``color_distributed`` caller warm-path-capable for
@@ -123,7 +127,7 @@ def _build_simulate_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
     recolor = jax.vmap(partial(_recolor_part, **step_kw))
     detect = jax.vmap(partial(_detect_part, **step_kw))
 
-    def fn(st, colors0, active0, seed):
+    def fn(st, colors0, ghost0, active0, seed):
         stats.traces += 1       # python side effect: fires only at trace time
         del seed                # deterministic runtime; reserved request input
         loop = _make_loop(
@@ -133,8 +137,7 @@ def _build_simulate_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
             jnp.sum,
             max_rounds=max_rounds,
         )
-        zeros_g = jnp.zeros(st["ghost_part"].shape, jnp.int32)
-        return loop(colors0, zeros_g, active0,
+        return loop(colors0, ghost0, active0,
                     jnp.zeros(st["ghost_real"].shape, bool),
                     strategy.init_state(st))
 
@@ -151,7 +154,7 @@ def _build_shard_map_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
     step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
                    backend=backend)
 
-    def device_fn(st, c, a0, seed):
+    def device_fn(st, c, g0, a0, seed):
         stats.traces += 1
         del seed
         st = {k: v[0] for k, v in st.items()}           # strip part axis
@@ -162,9 +165,8 @@ def _build_shard_map_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
             partial(jax.lax.psum, axis_name="p"),
             max_rounds=max_rounds,
         )
-        zeros_g = jnp.zeros((st["ghost_part"].shape[0],), jnp.int32)
         colors, rounds, conf, total, nbytes = loop(
-            c[0], zeros_g, a0[0], jnp.zeros_like(st["ghost_real"]),
+            c[0], g0[0], a0[0], jnp.zeros_like(st["ghost_real"]),
             strategy.init_state(st),
         )
         return colors[None], rounds, conf, total, nbytes
@@ -174,7 +176,7 @@ def _build_shard_map_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
         _shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(specs, PS("p"), PS("p"), PS()),
+            in_specs=(specs, PS("p"), PS("p"), PS("p"), PS()),
             out_specs=(PS("p"), PS(), PS(), PS(), PS()),
         ),
         donate_argnums=(1,),
@@ -207,6 +209,13 @@ class ColoringPlan:
         self._vertex_gid = pg.vertex_gid
         self._real = pg.vertex_gid != PAD_GID
         self._gids = np.clip(pg.vertex_gid, 0, pg.n_global - 1)
+        # Ghost gid gather tables: initial ghost colors are a per-request
+        # dynamic input derived from colors0 (warm starts and reduction
+        # passes see frozen cross-partition colors from round 0).
+        from repro.graph.csr import SENTINEL
+
+        self._ghost_real = pg.ghost_gid != SENTINEL
+        self._ghost_gids = np.clip(pg.ghost_gid, 0, pg.n_global - 1)
         self._strategy = strategy
         self._backend = backend
 
@@ -232,21 +241,27 @@ class ColoringPlan:
     # -- dynamic half ------------------------------------------------------
 
     def request_inputs(self, color_mask=None, colors0=None, seed=None):
-        """Host-side per-request inputs ``(colors0, active0, seed)``.
+        """Host-side per-request inputs ``(colors0, ghost0, active0, seed)``.
 
-        Stacked ``(P, n_local)`` arrays ready for :attr:`raw_fn` — the
+        Stacked ``(P, ...)`` arrays ready for :attr:`raw_fn` — the
         batched service uses this to assemble request batches; ``run``
-        uses it for the solo path.  Cheap: two gathers, no state rebuild.
+        uses it for the solo path.  Cheap: three gathers, no state
+        rebuild.  ``ghost0`` replicates ``colors0`` onto each part's
+        ghost slots so warm starts see frozen cross-partition colors in
+        the very first recolor (a full coloring starts all-zero, where
+        this is the zero table the cold path always used).
         """
         active0 = self._active0
         if color_mask is not None:
             active0 = active0 & np.asarray(color_mask, bool)[self._gids]
         if colors0 is None:
             c0 = np.zeros((self.n_parts, self.n_local), np.int32)
+            g0 = np.zeros(self._ghost_gids.shape, np.int32)
         else:
-            c0 = np.where(self._real,
-                          np.asarray(colors0, np.int32)[self._gids], 0)
-        return c0, active0, np.int32(0 if seed is None else seed)
+            colors0 = np.asarray(colors0, np.int32)
+            c0 = np.where(self._real, colors0[self._gids], 0)
+            g0 = np.where(self._ghost_real, colors0[self._ghost_gids], 0)
+        return c0, g0, active0, np.int32(0 if seed is None else seed)
 
     def run(self, color_mask=None, colors0=None, seed=None) -> ColoringResult:
         """Execute one recoloring request through the compiled program.
@@ -262,9 +277,10 @@ class ColoringPlan:
         retrace (the carry buffer is donated to the program).
         """
         t0 = time.perf_counter()
-        c0, active0, seed_ = self.request_inputs(color_mask, colors0, seed)
+        c0, g0, active0, seed_ = self.request_inputs(color_mask, colors0, seed)
         colors, rounds, conf, total, nbytes = self._fn(
-            self._st, jnp.asarray(c0), jnp.asarray(active0), seed_)
+            self._st, jnp.asarray(c0), jnp.asarray(g0), jnp.asarray(active0),
+            seed_)
         res = self._result(colors, rounds, conf, total, nbytes)
         self.stats.runs += 1
         self.stats.last_run_ms = (time.perf_counter() - t0) * 1e3
@@ -297,24 +313,51 @@ class ColoringPlan:
     def vertex_gid(self):
         return self._vertex_gid
 
+    @property
+    def nbytes(self) -> int:
+        """Approximate device-state bytes this plan pins while cached.
+
+        Sums the uploaded state tables plus the host-side request-input
+        gather tables; the compiled executable itself is not counted (XLA
+        does not expose it portably), so treat this as a lower bound.
+        """
+        st = sum(int(v.nbytes) for v in self._st.values())
+        host = sum(int(a.nbytes) for a in
+                   (self._active0, self._gids, self._ghost_gids,
+                    self._real, self._ghost_real, self._vertex_gid))
+        return st + host
+
 
 # --------------------------------------------------------------------------
 # Keyed LRU plan cache.
 # --------------------------------------------------------------------------
 
 class PlanCache:
-    """LRU cache of :class:`ColoringPlan` keyed by :class:`PlanKey`."""
+    """LRU cache of plans keyed by their frozen key dataclass.
 
-    def __init__(self, maxsize: int = 16):
+    Holds :class:`ColoringPlan` entries keyed by :class:`PlanKey` and
+    (keyed alongside them) the reduction subsystem's
+    :class:`~repro.core.reduce.ReductionPlan` entries keyed by
+    ``ReduceKey`` — any hashable key with a ``.nbytes``-reporting plan
+    works.  Eviction is LRU, bounded by entry count (``maxsize``) and
+    optionally by approximate pinned device-state bytes (``max_bytes``):
+    cached plans pin their state tables and executables, so a sweep over
+    many large topologies can otherwise hold every table on device.  The
+    most recent entry always survives, even when it alone exceeds
+    ``max_bytes``.
+    """
+
+    def __init__(self, maxsize: int = 16, max_bytes: int | None = None):
         self.maxsize = maxsize
+        self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
-        self._plans: OrderedDict[PlanKey, ColoringPlan] = OrderedDict()
+        self._plans: OrderedDict = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._plans)
 
-    def __contains__(self, key: PlanKey) -> bool:
+    def __contains__(self, key) -> bool:
         return key in self._plans
 
     def keys(self):
@@ -324,7 +367,19 @@ class PlanCache:
     def clear(self) -> None:
         self._plans.clear()
 
-    def get_or_build(self, key: PlanKey, builder) -> ColoringPlan:
+    @property
+    def total_bytes(self) -> int:
+        """Approximate pinned bytes across all cached plans."""
+        return sum(int(getattr(p, "nbytes", 0)) for p in self._plans.values())
+
+    def _evict(self) -> None:
+        while len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        if self.max_bytes is not None:
+            while len(self._plans) > 1 and self.total_bytes > self.max_bytes:
+                self._plans.popitem(last=False)
+
+    def get_or_build(self, key, builder):
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
@@ -333,8 +388,7 @@ class PlanCache:
         self.misses += 1
         plan = builder()
         self._plans[key] = plan
-        while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
+        self._evict()
         return plan
 
 

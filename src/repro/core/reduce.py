@@ -1,0 +1,385 @@
+"""Distributed iterative color reduction (Culberson-style class rebuild).
+
+Sarıyüce et al. ("On Distributed Graph Coloring with Iterative
+Recoloring") show a few distributed recoloring passes cut color counts
+substantially; Culberson's iterated greedy is the sequential ancestor:
+re-run greedy processing *whole color classes* of the previous coloring
+in a new order, and the color count can never grow (a vertex processed in
+the ``j``-th class sees colored neighbors only in earlier classes, so by
+induction its first-fit color is at most ``j``).  Class merges make it
+shrink.
+
+This module is the distributed analogue, built entirely on the
+compile-once runtime:
+
+* each **pass** ranks the current color classes with a pluggable
+  **order** (``reverse`` / ``largest_first`` / ``least_used_first`` — a
+  registry like backends/exchanges, extend with :func:`register_order`),
+  then rebuilds the coloring class-by-class: superstep ``j`` activates
+  the vertices of the ``j``-th ranked class and re-runs the existing
+  loop via ``ColoringPlan.run(colors0=partial, color_mask=members)``.
+  Already-rebuilt classes are frozen and constrain the active class to
+  small colors (their cross-partition colors are visible from round 0
+  via the plan's ``ghost0`` input); unprocessed classes are still
+  uncolored and constrain nothing.  A class of a proper coloring is
+  independent (in the problem's conflict graph), so supersteps converge
+  without conflict rounds.
+* the per-pass class selection — device histogram, order scores, class
+  ranking, per-vertex superstep index — is one jitted program frozen in
+  a :class:`ReductionPlan`, cached in the existing
+  :class:`~repro.core.plan.PlanCache` keyed alongside ``ColoringPlan``
+  entries (``ReduceKey``).  Warm passes trace nothing (``stats.traces``
+  is the probe the tests pin, same contract as ``ColoringPlan``).
+* passes iterate until the budget or until a pass stops improving; the
+  result carries the colors-by-pass trajectory *and* the measured
+  per-pass exchange payloads, so the paper's communication-vs-quality
+  tradeoff is a single measurable object.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import ColoringResult
+from repro.core.plan import ColoringPlan, PlanCache, default_plan_cache, get_plan
+from repro.core.quality import color_histogram_device
+from repro.core.validate import num_colors
+from repro.graph.partition import PartitionedGraph
+
+__all__ = [
+    "ORDERS",
+    "ReduceKey",
+    "ReductionPlan",
+    "ReductionResult",
+    "ReductionStats",
+    "get_order",
+    "get_reduce_plan",
+    "reduce_colors",
+    "register_order",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pluggable class orders (registry, like backends/exchanges).
+# ---------------------------------------------------------------------------
+
+def _score_reverse(color, hist):
+    """Highest color first — Culberson's classic reverse pass."""
+    del hist
+    return color.astype(jnp.float32)
+
+
+def _score_largest_first(color, hist):
+    """Biggest class first (ties -> lower color first, stable sort)."""
+    del color
+    return hist.astype(jnp.float32)
+
+
+def _score_least_used_first(color, hist):
+    """Smallest class first: tries to empty the rare colors into the
+    bulk classes rebuilt later."""
+    del color
+    return -hist.astype(jnp.float32)
+
+
+ORDERS: dict[str, callable] = {
+    "reverse": _score_reverse,
+    "largest_first": _score_largest_first,
+    "least_used_first": _score_least_used_first,
+}
+
+
+def register_order(name: str, score_fn) -> None:
+    """Register a class-order heuristic.
+
+    ``score_fn(color, hist) -> float32 scores`` over the ``(cap,)`` color
+    axis; higher scores are rebuilt earlier within a pass.  Ties process
+    lower colors first (stable sort).  Note the :class:`ReduceKey` caches
+    by *name*: re-registering a different function under an existing name
+    leaves stale plans in any live cache.
+    """
+    ORDERS[name] = score_fn
+
+
+def get_order(order: str):
+    if order not in ORDERS:
+        raise ValueError(f"unknown order {order!r}; have {sorted(ORDERS)}")
+    return ORDERS[order]
+
+
+# ---------------------------------------------------------------------------
+# The reduction plan: jitted class selection, cached alongside ColoringPlans.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReduceKey:
+    """Everything the jitted selection program depends on."""
+
+    n_global: int               # colors array length (the traced shape)
+    cap: int                    # histogram capacity (static)
+    order: str
+
+
+@dataclasses.dataclass
+class ReductionStats:
+    """Compile-once probes (same contract as ``PlanStats``)."""
+
+    traces: int = 0
+    selects: int = 0
+    passes: int = 0
+    reduce_ms: float = 0.0      # total wall time inside reduce_colors
+
+
+class ReductionPlan:
+    """Frozen static half of the class-selection step; see module docstring.
+
+    One jitted program per ``(n_global, cap, order)``: device histogram,
+    order scores, class ranking, and the per-vertex superstep index.
+    ``select`` feeds only the dynamic colors array — zero retraces warm.
+    """
+
+    def __init__(self, key: ReduceKey):
+        self.key = key
+        self.stats = ReductionStats()
+        score_fn = get_order(key.order)
+        cap = key.cap
+
+        def fn(colors):
+            self.stats.traces += 1      # python side effect: trace-time only
+            hist = color_histogram_device(colors, cap)
+            present = hist > 0
+            color = jnp.arange(cap, dtype=jnp.int32)
+            score = jnp.where(present, score_fn(color, hist), -jnp.inf)
+            seq = jnp.argsort(-score)   # colors, ranked (jnp sort is stable)
+            rank = jnp.zeros((cap,), jnp.int32).at[seq].set(color)
+            rank = jnp.where(present, rank, -1)
+            vrank = jnp.where(
+                colors > 0, rank[jnp.clip(colors, 0, cap - 1)], -1)
+            return hist, present.sum(), seq, vrank
+
+        self._fn = jax.jit(fn)
+
+    def select(self, colors: np.ndarray):
+        """Rank the classes of ``colors``: ``(hist, n_colors, vrank)``.
+
+        ``vrank[v]`` is the superstep at which vertex ``v``'s current
+        class is rebuilt (``-1`` = uncolored); the pass then runs
+        supersteps ``0 .. n_colors-1`` with ``color_mask = vrank == j``.
+        """
+        colors = jnp.asarray(np.asarray(colors, np.int32))
+        hist, n_colors, _, vrank = self._fn(colors)
+        self.stats.selects += 1
+        return np.asarray(hist), int(n_colors), np.asarray(vrank)
+
+    # Cached alongside ColoringPlans: report the (tiny) pinned footprint.
+    @property
+    def nbytes(self) -> int:
+        return 4 * (self.key.n_global + 2 * self.key.cap)
+
+
+def _cap_for(max_color: int) -> int:
+    """Histogram capacity: power of two above the initial color count, so
+    every pass of a shrinking coloring reuses one traced program."""
+    cap = 32
+    while cap <= max_color + 1:
+        cap *= 2
+    return cap
+
+
+def get_reduce_plan(n_global: int, cap: int, order: str,
+                    cache: PlanCache | None | bool = None) -> ReductionPlan:
+    """Fetch-or-build a :class:`ReductionPlan` through a plan cache.
+
+    Same cache semantics as :func:`~repro.core.plan.get_plan`: ``None`` /
+    ``True`` → the process-wide default cache (``ReduceKey`` entries sit
+    alongside ``PlanKey`` ones), a :class:`PlanCache` → that cache,
+    ``False`` → a fresh uncached plan.
+    """
+    get_order(order)                    # fail fast on unknown orders
+    key = ReduceKey(n_global=int(n_global), cap=int(cap), order=order)
+    if cache is False:
+        return ReductionPlan(key)
+    target = cache if isinstance(cache, PlanCache) else default_plan_cache()
+    return target.get_or_build(key, lambda: ReductionPlan(key))
+
+
+# ---------------------------------------------------------------------------
+# The reduction driver.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReductionResult:
+    """Outcome of :func:`reduce_colors` — final coloring + trajectory."""
+
+    colors: np.ndarray          # (n_global,) best coloring found
+    n_colors: int
+    initial_n_colors: int
+    improved: bool              # n_colors < initial_n_colors
+    passes_run: int             # passes attempted (incl. final non-improving)
+    colors_by_pass: list        # [initial, after pass 1, ...] attempted counts
+    comm_bytes_by_pass: list    # measured exchange payload spent per pass
+    rounds_by_pass: list        # loop rounds spent per pass (0 = conflict-free)
+    exchanges_by_pass: list     # exchange count per pass (supersteps + rounds)
+    converged: bool             # every superstep's loop converged
+    order: str
+    problem: str
+
+    @property
+    def comm_bytes_total(self) -> int:
+        return int(sum(self.comm_bytes_by_pass))
+
+    def merged_result(self, base: ColoringResult) -> ColoringResult:
+        """Fold the reduction into ``base`` (the pre-reduction result):
+        final colors/count, summed rounds + measured comm, so downstream
+        consumers see one end-to-end ``ColoringResult``.
+
+        The base run's per-round trajectory does not extend across
+        reduction supersteps, so ``comm_bytes_by_round`` is dropped
+        (``None``, like the pre-accounting runtimes) and
+        ``comm_bytes_per_round`` becomes the mean over *all* exchanges —
+        base rounds plus every superstep; the per-pass split stays
+        available here in :attr:`comm_bytes_by_pass`.
+        """
+        total = base.comm_bytes_total + self.comm_bytes_total
+        n_exchanges = base.rounds + 1 + int(sum(self.exchanges_by_pass))
+        return dataclasses.replace(
+            base,
+            colors=self.colors,
+            n_colors=self.n_colors,
+            rounds=base.rounds + int(sum(self.rounds_by_pass)),
+            converged=base.converged and self.converged,
+            comm_bytes_total=total,
+            comm_bytes_per_round=total // max(n_exchanges, 1),
+            comm_bytes_by_round=None,
+        )
+
+
+def reduce_colors(
+    pg_or_plan: PartitionedGraph | ColoringPlan,
+    result: ColoringResult | np.ndarray,
+    *,
+    passes: int = 2,
+    order: str = "reverse",
+    problem: str = "d1",
+    recolor_degrees: bool = True,
+    backend: str = "reference",
+    exchange: str = "all_gather",
+    engine: str = "auto",
+    max_rounds: int = 64,
+    cache: PlanCache | None | bool = None,
+    color_mask: np.ndarray | None = None,
+) -> ReductionResult:
+    """Reduce the color count of a finished coloring by iterative
+    distributed recoloring.
+
+    pg_or_plan: the partitioned topology — or an already-built
+    :class:`~repro.core.plan.ColoringPlan` for it (then ``problem`` /
+    ``backend`` / ``exchange`` / ``engine`` / ``max_rounds`` come from
+    the plan and the keyword values are ignored).
+
+    result: the coloring to improve — a ``ColoringResult`` or a raw
+    ``(n_global,)`` color array.  It must be proper for the plan's
+    problem; reduction preserves properness and never increases the
+    color count (each pass rebuilds the coloring class-by-class, so the
+    classic iterated-greedy bound applies).
+
+    passes: budget; iteration stops early when a pass stops improving.
+    order: class-rebuild order per pass (see :data:`ORDERS`).
+
+    color_mask: optional (n_global,) bool — reduce only this vertex
+    subset; everything outside keeps its input color exactly (the
+    partial-recolor contract of ``ColoringPlan.run``).  Classes are
+    ranked over the masked vertices only, and each pass rebuilds just
+    their memberships against the frozen rest.  Frozen neighbors carry
+    arbitrary colors, so the per-pass iterated-greedy bound no longer
+    applies — never-increase is instead enforced by accepting only
+    improving passes.
+
+    Returns a :class:`ReductionResult` carrying the best coloring, the
+    colors-by-pass trajectory, and the measured per-pass exchange
+    payloads — the communication *price* of the quality gain.
+    """
+    t0 = time.perf_counter()
+    if isinstance(pg_or_plan, ColoringPlan):
+        plan = pg_or_plan
+    else:
+        plan = get_plan(
+            pg_or_plan, problem=problem, recolor_degrees=recolor_degrees,
+            backend=backend, exchange=exchange, engine=engine,
+            max_rounds=max_rounds, cache=cache,
+        )
+    problem = plan.key.problem
+    colors = np.asarray(
+        result.colors if isinstance(result, ColoringResult) else result,
+        np.int32)
+    if colors.shape != (plan.n_global,):
+        raise ValueError(
+            f"colors shape {colors.shape} != (n_global,) = ({plan.n_global},)")
+    mask = None
+    if color_mask is not None:
+        mask = np.asarray(color_mask, bool)
+        if mask.shape != colors.shape:
+            raise ValueError(
+                f"color_mask shape {mask.shape} != colors {colors.shape}")
+
+    initial = num_colors(colors)
+    max_color = int(colors.max()) if colors.size else 0
+    rplan = get_reduce_plan(plan.n_global, _cap_for(max_color), order,
+                            cache=cache)
+
+    best = colors
+    best_n = initial
+    colors_by_pass = [initial]
+    comm_by_pass: list[int] = []
+    rounds_by_pass: list[int] = []
+    exchanges_by_pass: list[int] = []
+    converged = True
+    passes_run = 0
+    for _ in range(max(passes, 0)):
+        if best_n == 0:
+            break
+        # Rank classes over the reducible vertices only; frozen vertices
+        # get vrank == -1 (never rebuilt) and keep their colors in acc.
+        _, n_classes, vrank = rplan.select(
+            best if mask is None else np.where(mask, best, 0))
+        acc = np.zeros_like(best) if mask is None else np.where(mask, 0, best)
+        pass_comm = 0
+        pass_rounds = 0
+        pass_exchanges = 0
+        for j in range(n_classes):
+            r = plan.run(color_mask=vrank == j, colors0=acc)
+            acc = r.colors
+            pass_comm += r.comm_bytes_total
+            pass_rounds += r.rounds
+            pass_exchanges += r.rounds + 1
+            converged &= r.converged
+        passes_run += 1
+        rplan.stats.passes += 1
+        new_n = num_colors(acc)
+        colors_by_pass.append(new_n)
+        comm_by_pass.append(pass_comm)
+        rounds_by_pass.append(pass_rounds)
+        exchanges_by_pass.append(pass_exchanges)
+        if new_n >= best_n:
+            break                       # no improvement: budget unspent
+        best, best_n = acc, new_n
+
+    rplan.stats.reduce_ms += (time.perf_counter() - t0) * 1e3
+    return ReductionResult(
+        colors=best,
+        n_colors=best_n,
+        initial_n_colors=initial,
+        improved=best_n < initial,
+        passes_run=passes_run,
+        colors_by_pass=colors_by_pass,
+        comm_bytes_by_pass=comm_by_pass,
+        rounds_by_pass=rounds_by_pass,
+        exchanges_by_pass=exchanges_by_pass,
+        converged=converged,
+        order=order,
+        problem=problem,
+    )

@@ -10,12 +10,44 @@ import numpy as np
 
 from repro.graph.csr import Graph
 
-__all__ = ["is_proper_d1", "is_proper_d2", "is_proper_pd2", "num_colors", "count_conflicts_d1"]
+__all__ = [
+    "is_proper_d1",
+    "is_proper_d2",
+    "is_proper_pd2",
+    "num_colors",
+    "count_conflicts_d1",
+    "color_histogram",
+    "is_balanced",
+]
 
 
 def num_colors(colors: np.ndarray) -> int:
     c = colors[colors > 0]
     return int(np.unique(c).size)
+
+
+def color_histogram(colors: np.ndarray, *, minlength: int = 0) -> np.ndarray:
+    """Color-class sizes: ``h[c]`` = vertices with color ``c``.
+
+    ``h[0]`` counts uncolored vertices; the length is
+    ``max(colors.max()+1, minlength)``.  This is the host-side oracle the
+    device metrics in :mod:`repro.core.quality` are pinned against, so
+    the two definitions cannot drift.
+    """
+    colors = np.asarray(colors)
+    return np.bincount(colors[colors >= 0].astype(np.int64),
+                       minlength=max(minlength, 1))
+
+
+def is_balanced(colors: np.ndarray, *, tol: float = 1.25) -> bool:
+    """True when the largest color class is within ``tol`` × the mean
+    class size (over non-empty classes) — the balanced-coloring criterion
+    quality metrics report as ``balance``."""
+    h = color_histogram(colors)[1:]
+    h = h[h > 0]
+    if h.size == 0:
+        return True
+    return float(h.max()) <= tol * float(h.mean())
 
 
 def count_conflicts_d1(graph: Graph, colors: np.ndarray) -> int:

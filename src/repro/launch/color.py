@@ -19,6 +19,12 @@ same topology is recolored N times through the compile-once plan cache
 (``repro.serve.ColoringService``); the cold first request (host state
 build + trace + compile) and the warm per-timestep latency are reported
 separately.
+
+--reduce-passes P runs up to P iterative color-reduction passes
+(``repro.core.reduce``) over the finished coloring, rebuilding its color
+classes in --reduce-order; the colors-vs-passes trajectory and the
+measured per-pass comm payload are printed, and the final (reduced)
+coloring is validated.
 """
 from __future__ import annotations
 
@@ -74,6 +80,12 @@ def main() -> None:
     ap.add_argument("--repeat", type=int, default=1, metavar="N",
                     help="timestep mode: recolor the topology N times "
                          "through the plan cache, report cold vs warm ms")
+    ap.add_argument("--reduce-passes", type=int, default=0, metavar="P",
+                    help="post-color quality: up to P iterative color-"
+                         "reduction passes (repro.core.reduce)")
+    ap.add_argument("--reduce-order", default="reverse",
+                    choices=["reverse", "largest_first", "least_used_first"],
+                    help="class-rebuild order used by --reduce-passes")
     args = ap.parse_args()
 
     g = make_graph(args.graph)
@@ -95,7 +107,8 @@ def main() -> None:
         svc = ColoringService(
             pg, problem=args.problem,
             recolor_degrees=not args.no_recolor_degrees,
-            backend=args.backend, exchange=args.exchange, engine=args.engine)
+            backend=args.backend, exchange=args.exchange, engine=args.engine,
+            reduce_passes=args.reduce_passes, reduce_order=args.reduce_order)
         for _ in range(args.repeat):
             res = svc.submit()
         print(f"[color] repeat={args.repeat} engine={svc.engine} "
@@ -107,6 +120,22 @@ def main() -> None:
             pg, problem=args.problem,
             recolor_degrees=not args.no_recolor_degrees,
             backend=args.backend, exchange=args.exchange, engine=args.engine)
+    if args.reduce_passes > 0 and (args.baseline or args.repeat <= 1):
+        from repro.core.quality import trajectory
+        from repro.core.reduce import reduce_colors
+
+        red = reduce_colors(
+            pg, res, passes=args.reduce_passes, order=args.reduce_order,
+            problem=args.problem,
+            recolor_degrees=not args.no_recolor_degrees,
+            backend="reference" if args.baseline else args.backend,
+            exchange="all_gather" if args.baseline else args.exchange,
+            engine=args.engine)
+        print(f"[color] reduce order={args.reduce_order} "
+              f"passes={red.passes_run}/{args.reduce_passes} "
+              f"colors {red.initial_n_colors} -> {red.n_colors} "
+              f"({trajectory(red.colors_by_pass, red.comm_bytes_by_pass)})")
+        res = red.merged_result(res)
     dt = time.time() - t0
     ok = VALIDATORS[args.problem](g, res.colors)
     print(f"[color] {res.problem} parts={res.n_parts} "

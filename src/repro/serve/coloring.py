@@ -20,6 +20,12 @@ program, built once — and executes requests through its warm path:
 executions that traced + compiled a program (the first solo run and the
 first batch of each size bucket), ``warm_ms_mean`` is the steady-state
 per-request latency — the number the plan cache exists to amortize.
+
+``reduce_passes=N`` turns on the quality axis per request: every
+finished coloring is run through up to N iterative color-reduction
+passes (``repro.core.reduce``) on the same warm plan before it is
+returned, and the result folds in the reduction's rounds and measured
+comm bytes.
 """
 from __future__ import annotations
 
@@ -69,6 +75,8 @@ class ColoringService:
         engine: str = "auto",
         max_rounds: int = 64,
         cache: PlanCache | None | bool = None,
+        reduce_passes: int = 0,
+        reduce_order: str = "reverse",
     ):
         self.plan = get_plan(
             pg, problem=problem, recolor_degrees=recolor_degrees,
@@ -78,6 +86,26 @@ class ColoringService:
         self.engine = self.plan.key.engine
         self.stats = ServiceStats()
         self._batched: dict[int, callable] = {}   # batch size -> jitted vmap
+        # Optional post-color quality pass (repro.core.reduce): every
+        # request's finished coloring is run through reduce_passes of
+        # iterative color reduction on the same warm plan.
+        self.reduce_passes = reduce_passes
+        self.reduce_order = reduce_order
+        self._reduce_cache = cache
+
+    def _maybe_reduce(self, res: ColoringResult,
+                      color_mask=None) -> ColoringResult:
+        if self.reduce_passes <= 0:
+            return res
+        from repro.core.reduce import reduce_colors
+
+        # The request's color_mask is honored end-to-end: reduction only
+        # rebuilds classes inside it, so vertices the request froze keep
+        # their colors through the quality pass too.
+        red = reduce_colors(self.plan, res, passes=self.reduce_passes,
+                            order=self.reduce_order, cache=self._reduce_cache,
+                            color_mask=color_mask)
+        return red.merged_result(res)
 
     # -- request paths -----------------------------------------------------
 
@@ -85,7 +113,9 @@ class ColoringService:
         """Execute one recoloring request through the plan's warm path."""
         t0 = time.perf_counter()
         cold = self.plan.stats.runs == 0    # first execution traces+compiles
-        res = self.plan.run(color_mask=color_mask, colors0=colors0, seed=seed)
+        res = self._maybe_reduce(
+            self.plan.run(color_mask=color_mask, colors0=colors0, seed=seed),
+            color_mask=color_mask)
         self._account(time.perf_counter() - t0, 1, cold)
         return res
 
@@ -122,19 +152,25 @@ class ColoringService:
         # Pad slots carry an all-False active mask: they converge in round
         # zero and the while_loop batching rule masks them thereafter.
         pad = [(np.zeros_like(ins[0][0]), np.zeros_like(ins[0][1]),
-                ins[0][2])] * (bucket - n)
+                np.zeros_like(ins[0][2]), ins[0][3])] * (bucket - n)
         ins += pad
         c0 = jnp.asarray(np.stack([i[0] for i in ins]))
-        a0 = jnp.asarray(np.stack([i[1] for i in ins]))
-        seeds = jnp.asarray(np.stack([i[2] for i in ins]))
+        g0 = jnp.asarray(np.stack([i[1] for i in ins]))
+        a0 = jnp.asarray(np.stack([i[2] for i in ins]))
+        seeds = jnp.asarray(np.stack([i[3] for i in ins]))
         fn = self._batched.get(bucket)
         cold = fn is None                   # first use of a bucket compiles
         if cold:
-            fn = jax.jit(jax.vmap(self.plan.raw_fn, in_axes=(None, 0, 0, 0)))
+            fn = jax.jit(jax.vmap(self.plan.raw_fn,
+                                  in_axes=(None, 0, 0, 0, 0)))
             self._batched[bucket] = fn
-        colors, rounds, conf, total, nbytes = fn(self.plan._st, c0, a0, seeds)
+        colors, rounds, conf, total, nbytes = fn(
+            self.plan._st, c0, g0, a0, seeds)
         out = [
-            self.plan._result(colors[b], rounds[b], conf[b], total[b], nbytes[b])
+            self._maybe_reduce(
+                self.plan._result(colors[b], rounds[b], conf[b], total[b],
+                                  nbytes[b]),
+                color_mask=requests[b].get("color_mask"))
             for b in range(n)
         ]
         self._account(time.perf_counter() - t0, n, cold)

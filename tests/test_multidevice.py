@@ -161,6 +161,39 @@ print("OK")
     assert "OK" in out
 
 
+def test_reduce_colors_shard_map():
+    """The color-reduction subsystem through the shard_map engine: never
+    more colors, proper, conflict-free supersteps, and bit-identical to
+    the simulate engine (both rebuild the same classes in the same
+    order against the same frozen ghosts)."""
+    out = run_py("""
+import numpy as np
+from repro.graph.generators import hex_mesh
+from repro.graph.partition import partition_graph
+from repro.core.plan import PlanCache, get_plan
+from repro.core.reduce import reduce_colors
+from repro.core.validate import is_proper_d1, is_proper_d2
+
+g = hex_mesh(24, 8, 8)
+pg = partition_graph(g, 8, second_layer=True)
+cache = PlanCache()
+for problem, check in (("d1", is_proper_d1), ("d2", is_proper_d2)):
+    plan = get_plan(pg, problem=problem, engine="shard_map", cache=cache)
+    assert plan.key.engine == "shard_map"
+    res = plan.run()
+    red = reduce_colors(plan, res, passes=2, cache=cache)
+    assert red.n_colors <= res.n_colors, problem
+    assert check(g, red.colors), problem
+    assert all(r == 0 for r in red.rounds_by_pass), problem   # conflict-free
+    sim_plan = get_plan(pg, problem=problem, engine="simulate", cache=cache)
+    sim_red = reduce_colors(sim_plan, sim_plan.run(), passes=2, cache=cache)
+    assert (red.colors == sim_red.colors).all(), problem
+    assert red.colors_by_pass == sim_red.colors_by_pass, problem
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_sharded_train_two_axis_mesh():
     out = run_py("""
 import jax

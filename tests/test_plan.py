@@ -136,6 +136,33 @@ def test_cache_lru_eviction_order():
     assert cache.keys() == [ka, kc]                   # LRU -> MRU order
 
 
+def test_cache_byte_bounded_eviction():
+    """A sweep over many topologies must evict by pinned device-state
+    bytes, not only by entry count (ROADMAP follow-up: cached plans pin
+    their state tables, so 16 huge topologies could otherwise all stay
+    resident)."""
+    probe = build_plan(PG, engine="simulate")
+    assert probe.nbytes > 0
+    budget = int(probe.nbytes * 2.5)          # fits ~2 same-sized plans
+    cache = PlanCache(maxsize=32, max_bytes=budget)
+    topologies = [
+        partition_graph(hex_mesh(6, 4, k), 3, strategy="block",
+                        second_layer=True)
+        for k in (3, 4, 5, 6)
+    ]
+    keys = [get_plan(t, engine="simulate", cache=cache).key
+            for t in topologies]
+    assert cache.misses == len(topologies)
+    assert len(cache) < len(topologies)       # byte limit forced eviction
+    assert cache.total_bytes <= budget
+    assert keys[-1] in cache                  # most recent always survives
+    assert keys[0] not in cache               # LRU evicted first
+    # A single over-budget plan is kept: the cache never self-empties.
+    tiny = PlanCache(maxsize=8, max_bytes=1)
+    k = get_plan(PG, engine="simulate", cache=tiny).key
+    assert len(tiny) == 1 and k in tiny
+
+
 def test_plan_key_records_resolved_engine():
     plan = build_plan(PG, engine="auto")
     assert plan.key.engine in ("simulate", "shard_map")

@@ -1,0 +1,77 @@
+"""Quality metrics: device/host histogram parity, balance, reports.
+
+The host helpers in ``core/validate.py`` are the oracles; the device
+metrics in ``core/quality.py`` must agree exactly so benchmarks and the
+reduction subsystem's jitted selection can't drift from the validators.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quality import (
+    balance_metrics,
+    color_histogram_device,
+    part_class_sizes,
+    quality_report,
+    trajectory,
+)
+from repro.core.validate import color_histogram, is_balanced, num_colors
+
+RNG = np.random.default_rng(7)
+
+
+def test_device_histogram_matches_host_oracle():
+    colors = RNG.integers(0, 9, size=500).astype(np.int32)
+    host = color_histogram(colors, minlength=16)
+    host[0] = 0                           # device metric drops uncolored
+    dev = np.asarray(color_histogram_device(jnp.asarray(colors), 16))
+    assert (dev == host).all()
+    # Colors beyond the capacity aggregate into the top bucket: the
+    # colored-vertex count is conserved.
+    big = np.concatenate([colors, np.full(7, 40, np.int32)])
+    dev_big = np.asarray(color_histogram_device(jnp.asarray(big), 16))
+    assert dev_big.sum() == (big > 0).sum()
+    assert dev_big[15] == 7
+
+
+def test_part_class_sizes_sums_to_global():
+    stacked = RNG.integers(0, 6, size=(4, 100)).astype(np.int32)
+    per_part = np.asarray(part_class_sizes(jnp.asarray(stacked), 8))
+    assert per_part.shape == (4, 8)
+    glob = color_histogram(stacked.reshape(-1), minlength=8)
+    glob[0] = 0
+    assert (per_part.sum(axis=0) == glob).all()
+    for p in range(4):
+        h = color_histogram(stacked[p], minlength=8)
+        h[0] = 0
+        assert (per_part[p] == h).all()
+
+
+def test_balance_metrics_and_is_balanced():
+    colors = np.array([1, 1, 1, 1, 2, 2, 3, 0, 0], np.int32)
+    mx, mn, mean, balance, skew = balance_metrics(color_histogram(colors))
+    assert (mx, mn) == (4, 1)
+    assert mean == 7 / 3
+    assert balance == 4 / mean and skew == 4.0
+    assert not is_balanced(colors, tol=1.25)
+    assert is_balanced(colors, tol=2.0)
+    assert is_balanced(np.array([1, 2, 3], np.int32))      # all singletons
+    assert is_balanced(np.zeros(5, np.int32))              # nothing colored
+    assert balance_metrics(color_histogram(np.zeros(3, np.int32)))[0] == 0
+
+
+def test_quality_report_fields():
+    colors = np.array([1, 1, 2, 2, 2, 3, 0], np.int32)
+    stacked = colors[:6].reshape(2, 3)
+    q = quality_report(colors, stacked_colors=stacked)
+    assert q.n_colors == num_colors(colors) == 3
+    assert q.n_colored == 6 and q.n_uncolored == 1
+    assert q.max_class_size == 3 and q.min_class_size == 1
+    assert q.part_class_sizes.shape == (2, q.histogram.shape[0])
+    assert q.part_class_sizes.sum() == 6
+    assert "colors=3" in q.row() and "balance=" in q.row()
+
+
+def test_trajectory_rendering():
+    assert trajectory([12, 10, 9]) == "12>10>9"
+    assert trajectory([5], []) == "5;comm="
+    assert trajectory([12, 9], [100, 80]) == "12>9;comm=100+80"

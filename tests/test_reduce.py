@@ -1,0 +1,291 @@
+"""Color-reduction subsystem (ISSUE-4): never-increase, properness,
+strict-improvement pins, warm-path trace probes, order registry, and the
+chromatic lower-bound invariants of the generators.
+
+The mechanism under test is Culberson-style class rebuild: a pass ranks
+the current color classes (pluggable order) and rebuilds the coloring
+class-by-class through the warm ``ColoringPlan`` — each superstep's
+active set is an independent class, so supersteps are conflict-free
+(rounds == 0) and the classic iterated-greedy bound guarantees the count
+never grows.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distributed import color_distributed
+from repro.core.exchange import EXCHANGES
+from repro.core.greedy import greedy_d1
+from repro.core.plan import PlanCache, build_plan, get_plan
+from repro.core.reduce import (
+    ReduceKey,
+    get_order,
+    get_reduce_plan,
+    reduce_colors,
+    register_order,
+)
+from repro.core.validate import (
+    is_proper_d1,
+    is_proper_d2,
+    is_proper_pd2,
+    num_colors,
+)
+from repro.graph.generators import hex_mesh, mycielskian, rmat
+from repro.graph.partition import partition_graph
+from repro.serve.coloring import ColoringService
+
+GRAPH = hex_mesh(6, 4, 4)
+PG = partition_graph(GRAPH, 3, strategy="block", second_layer=True)
+_CACHE = PlanCache(maxsize=64)
+
+VALIDATORS = {"d1": is_proper_d1, "d2": is_proper_d2, "pd2": is_proper_pd2}
+
+
+# ---------------------------------------------------------------------------
+# Generator quality invariants: chromatic number is a hard lower bound.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [5, 7])
+def test_mycielskian_chromatic_lower_bound(k):
+    """mycielskian(k) has chromatic number exactly k: serial greedy and
+    the distributed D1 runtime must never beat it, and reduction passes
+    must respect it too."""
+    g = mycielskian(k)
+    assert num_colors(greedy_d1(g)) >= k
+    pg = partition_graph(g, 3, strategy="edge_balanced")
+    res = color_distributed(pg, problem="d1", engine="simulate", cache=_CACHE)
+    assert is_proper_d1(g, res.colors)
+    assert res.n_colors >= k
+    red = reduce_colors(pg, res, passes=3, engine="simulate", cache=_CACHE)
+    assert is_proper_d1(g, red.colors)
+    assert red.n_colors >= k
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pins: passes >= 2 strictly reduce the toy rmat + mycielskian.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph,parts,strategy", [
+    (rmat(8, 8, seed=1, name="social_tiny"), 8, "random"),
+    (mycielskian(9), 4, "edge_balanced"),
+])
+def test_reduce_strictly_improves_toy_inputs(graph, parts, strategy):
+    pg = partition_graph(graph, parts, strategy=strategy)
+    plan = get_plan(pg, problem="d1", engine="simulate", cache=_CACHE)
+    res = plan.run()
+    red = reduce_colors(plan, res, passes=2)
+    assert is_proper_d1(graph, red.colors), graph.name
+    assert red.improved and red.n_colors < res.n_colors, (
+        graph.name, red.colors_by_pass)
+    assert red.colors_by_pass[0] == res.n_colors
+    assert min(red.colors_by_pass) == red.n_colors
+    # Supersteps rebuild independent classes: conflict-free, and each
+    # pass's measured comm payload is accounted.
+    assert all(b > 0 for b in red.comm_bytes_by_pass)
+    assert red.comm_bytes_total == sum(red.comm_bytes_by_pass)
+
+
+# ---------------------------------------------------------------------------
+# Never-increase + properness: problems x every registered exchange.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("problem", ["d1", "d2", "pd2"])
+@pytest.mark.parametrize("exchange", sorted(EXCHANGES))
+def test_reduce_proper_never_increases(problem, exchange):
+    if exchange == "halo" and not PG.halo_neighbors_ok():
+        pytest.skip("partition not slab-legal")
+    plan = get_plan(PG, problem=problem, exchange=exchange,
+                    engine="simulate", cache=_CACHE)
+    res = plan.run()
+    red = reduce_colors(plan, res, passes=2)
+    assert red.converged
+    assert red.n_colors <= res.n_colors
+    assert VALIDATORS[problem](GRAPH, red.colors), (problem, exchange)
+    # Rebuilt classes are independent sets of the conflict graph: no
+    # superstep should ever need a conflict-resolution round.
+    assert all(r == 0 for r in red.rounds_by_pass), (problem, exchange)
+    # The trajectory is monotone until the final (non-improving) attempt.
+    accepted = red.colors_by_pass[:-1]
+    assert accepted == sorted(accepted, reverse=True)
+
+
+def test_reduce_all_orders_safe():
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=_CACHE)
+    res = plan.run()
+    outs = {}
+    for order in ("reverse", "largest_first", "least_used_first"):
+        red = reduce_colors(plan, res, passes=3, order=order)
+        assert is_proper_d1(GRAPH, red.colors), order
+        assert red.n_colors <= res.n_colors, order
+        outs[order] = red.n_colors
+    assert outs  # all orders ran
+
+
+# ---------------------------------------------------------------------------
+# Warm-path contract: zero retraces across reductions (plan + ReductionPlan).
+# ---------------------------------------------------------------------------
+
+def test_warm_reduction_zero_retraces():
+    cache = PlanCache()
+    plan = build_plan(PG, problem="d1", engine="simulate")
+    res = plan.run()
+    red1 = reduce_colors(plan, res, passes=2, cache=cache)
+    rkeys = [k for k in cache.keys() if isinstance(k, ReduceKey)]
+    assert len(rkeys) == 1                    # ReductionPlan cached by key
+    rplan = cache._plans[rkeys[0]]
+    reduce_traces = rplan.stats.traces
+    assert reduce_traces >= 1
+    coloring_traces = plan.stats.traces
+    red2 = reduce_colors(plan, res, passes=2, cache=cache)
+    assert rplan.stats.traces == reduce_traces    # zero retraces warm
+    assert plan.stats.traces == coloring_traces
+    assert (red1.colors == red2.colors).all() # deterministic
+    assert cache.hits >= 1
+
+
+def test_reduce_plan_cached_alongside_coloring_plans():
+    cache = PlanCache()
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=cache)
+    res = plan.run()
+    reduce_colors(plan, res, passes=1, cache=cache)
+    kinds = {type(k).__name__ for k in cache.keys()}
+    assert kinds == {"PlanKey", "ReduceKey"}
+    # Same (n_global, cap, order) -> same ReductionPlan instance.
+    rk = [k for k in cache.keys() if isinstance(k, ReduceKey)][0]
+    assert get_reduce_plan(rk.n_global, rk.cap, rk.order, cache=cache) \
+        is cache._plans[rk]
+    # cache=False builds fresh, uncached plans.
+    a = get_reduce_plan(rk.n_global, rk.cap, rk.order, cache=False)
+    b = get_reduce_plan(rk.n_global, rk.cap, rk.order, cache=False)
+    assert a is not b
+
+
+# ---------------------------------------------------------------------------
+# Order registry.
+# ---------------------------------------------------------------------------
+
+def test_order_registry():
+    with pytest.raises(ValueError, match="unknown order"):
+        get_order("nope")
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=_CACHE)
+    res = plan.run()
+    with pytest.raises(ValueError, match="unknown order"):
+        reduce_colors(plan, res, passes=1, order="nope")
+
+    import jax.numpy as jnp
+
+    def natural(color, hist):                 # lowest colors rebuilt first
+        del hist
+        return -color.astype(jnp.float32)
+
+    register_order("natural_test", natural)
+    try:
+        red = reduce_colors(plan, res, passes=2, order="natural_test",
+                            cache=PlanCache())
+        assert is_proper_d1(GRAPH, red.colors)
+        assert red.n_colors <= res.n_colors
+    finally:
+        from repro.core.reduce import ORDERS
+
+        del ORDERS["natural_test"]
+
+
+# ---------------------------------------------------------------------------
+# Integration: color_distributed / ColoringService / warm-start semantics.
+# ---------------------------------------------------------------------------
+
+def test_color_distributed_reduce_passes_folds_result():
+    base = color_distributed(PG, problem="d1", engine="simulate",
+                             cache=_CACHE)
+    red = color_distributed(PG, problem="d1", engine="simulate",
+                            cache=_CACHE, reduce_passes=2)
+    assert is_proper_d1(GRAPH, red.colors)
+    assert red.n_colors <= base.n_colors
+    # The reduction's measured comm is folded into the end-to-end result;
+    # the base per-round trajectory can't extend across supersteps, so it
+    # is dropped rather than left stale (per-pass split lives on the
+    # ReductionResult).
+    assert red.comm_bytes_total > base.comm_bytes_total
+    assert red.comm_bytes_by_round is None
+    assert 0 < red.comm_bytes_per_round <= red.comm_bytes_total
+    assert red.converged
+
+
+def test_service_post_color_reduction_matches_direct():
+    cache = PlanCache()
+    svc = ColoringService(PG, problem="d1", engine="simulate", cache=cache,
+                          reduce_passes=2)
+    out = svc.submit()
+    direct = svc.plan.run()
+    red = reduce_colors(svc.plan, direct, passes=2, cache=cache)
+    assert (out.colors == red.colors).all()
+    assert out.n_colors == red.n_colors
+    # The batched path reduces every element identically.
+    b1, b2 = svc.run_batch([{}, {}])
+    assert (b1.colors == out.colors).all()
+    assert (b2.colors == out.colors).all()
+
+
+def test_masked_reduction_respects_frozen_vertices():
+    """The partial-recolor contract survives the quality pass: a request
+    that freezes vertices via color_mask must get them back untouched
+    even with reduce_passes on — reduction ranks and rebuilds only the
+    classes inside the mask."""
+    g = rmat(8, 8, seed=1)
+    pg = partition_graph(g, 8, strategy="random")
+    cache = PlanCache()
+    plan = get_plan(pg, problem="d1", engine="simulate", cache=cache)
+    base = plan.run()
+    mask = np.arange(g.n) % 2 == 0                # dirty region
+    frozen = ~mask
+
+    red = reduce_colors(plan, base, passes=2, color_mask=mask, cache=cache)
+    assert (red.colors[frozen] == base.colors[frozen]).all()
+    assert is_proper_d1(g, red.colors)
+    assert red.n_colors <= base.n_colors
+
+    svc = ColoringService(pg, problem="d1", engine="simulate", cache=cache,
+                          reduce_passes=2)
+    out = svc.submit(color_mask=mask, colors0=base.colors)
+    assert (out.colors[frozen] == base.colors[frozen]).all()
+    assert is_proper_d1(g, out.colors)
+    # The vmap-batched path threads each request's own mask too.
+    bout, bfull = svc.run_batch(
+        [{"color_mask": mask, "colors0": base.colors}, {}])
+    assert (bout.colors[frozen] == base.colors[frozen]).all()
+    assert is_proper_d1(g, bfull.colors)
+    # Bad mask shapes are rejected.
+    with pytest.raises(ValueError, match="color_mask"):
+        reduce_colors(plan, base, passes=1, color_mask=np.ones(3, bool))
+
+
+def test_warm_start_sees_frozen_ghosts_round_zero():
+    """The plan's ghost0 input: recoloring one independent class of a
+    proper coloring against the frozen rest must produce zero conflicts
+    and zero extra rounds — cross-partition frozen colors are visible
+    from the very first recolor."""
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=_CACHE)
+    base = plan.run()
+    top = int(base.colors.max())
+    mask = base.colors == top
+    res = plan.run(color_mask=mask, colors0=np.where(mask, 0, base.colors))
+    assert res.rounds == 0
+    assert res.total_conflicts == 0
+    # Frozen vertices kept their colors; the rebuilt class is proper.
+    assert (res.colors[~mask] == base.colors[~mask]).all()
+    assert is_proper_d1(GRAPH, res.colors)
+    assert (res.colors[mask] <= top).all()    # first-fit never climbs
+
+
+def test_reduce_validates_colors_shape():
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=_CACHE)
+    with pytest.raises(ValueError, match="n_global"):
+        reduce_colors(plan, np.zeros(3, np.int32), passes=1)
+
+
+def test_reduce_zero_passes_is_noop():
+    plan = get_plan(PG, problem="d1", engine="simulate", cache=_CACHE)
+    res = plan.run()
+    red = reduce_colors(plan, res, passes=0)
+    assert red.passes_run == 0 and not red.improved
+    assert (red.colors == res.colors).all()
+    assert red.colors_by_pass == [res.n_colors]
