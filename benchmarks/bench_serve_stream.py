@@ -1,0 +1,141 @@
+"""Mixed-topology request streams through the continuous-batching frontend.
+
+The ISSUE-5 serving scenario: a stream of recoloring requests over
+*several* mesh topologies served by one :class:`ColoringFrontend` —
+requests routed per topology through the plan cache, executed on the
+slot scheduler (finished vmap slots refill from the pending queue), and
+optionally run through the batched color-reduction pass.
+
+Each row replays one stream twice: the **cold** pass pays every
+topology's host state build + program compiles, the **warm** replay runs
+entirely through compiled programs.  ``derived`` reports sustained
+requests/sec for both, the compile/execution split, and the refill
+count.  Three acceptance checks run on every invocation (CI runs the toy
+variant as suite ``serve_stream_smoke``):
+
+* every streamed result is bit-identical to its solo ``plan.run``
+  equivalent — including the ``reduce_passes > 0`` stream, checked
+  against solo ``reduce_colors`` + ``merged_result``;
+* the warm replay performs zero host state rebuilds and zero retraces
+  (the build hook is poisoned and the per-plan trace probes are pinned);
+* the warm replay sustains strictly higher throughput than the cold
+  pass, and oversized per-topology queues actually refill slots.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core import plan as plan_mod
+from repro.core.plan import PlanCache, get_plan
+from repro.core.reduce import reduce_colors
+from repro.graph.generators import grid_2d, hex_mesh, mycielskian
+from repro.graph.partition import partition_graph
+from repro.serve import ColoringFrontend
+
+import numpy as np
+
+
+def _solo_oracle(pg, req, cfg, reduce_passes, oracle_cache):
+    plan = get_plan(pg, cache=oracle_cache, **cfg)
+    base = plan.run(**req)
+    if reduce_passes <= 0:
+        return base
+    red = reduce_colors(plan, base, passes=reduce_passes, cache=oracle_cache,
+                        color_mask=req.get("color_mask"))
+    return red.merged_result(base)
+
+
+def _stream_row(name: str, pgs, *, requests: int, reduce_passes: int = 0,
+                max_batch: int = 4, **cfg) -> tuple[str, float]:
+    fe = ColoringFrontend(cache=PlanCache(), engine="simulate",
+                          max_batch=max_batch, reduce_passes=reduce_passes,
+                          **cfg)
+    pairs = []
+    for i in range(requests):
+        pg = pgs[i % len(pgs)]
+        req = ({} if i % 3 != 2
+               else {"color_mask": np.arange(pg.n_global) % 2 == 0})
+        pairs.append((pg, req))
+
+    t0 = time.perf_counter()
+    cold_results = fe.run_stream(pairs)
+    cold_s = time.perf_counter() - t0
+
+    # Warm replay: zero host rebuilds, zero retraces, zero new compiles.
+    plans = [g.plan for g in fe._groups.values()]
+    traces = [p.stats.traces for p in plans]
+    cold_runs = fe.stats.cold_runs
+    real_build = plan_mod.build_device_state
+
+    def _poisoned(*a, **kw):
+        raise AssertionError("warm stream replay rebuilt host state")
+
+    plan_mod.build_device_state = _poisoned
+    try:
+        t0 = time.perf_counter()
+        warm_results = fe.run_stream(pairs)
+        warm_s = time.perf_counter() - t0
+    finally:
+        plan_mod.build_device_state = real_build
+    assert [p.stats.traces for p in plans] == traces, "warm replay retraced"
+    assert fe.stats.cold_runs == cold_runs, "warm replay compiled programs"
+    assert warm_s < cold_s, (
+        f"stream warm replay not faster: {warm_s:.2f}s vs {cold_s:.2f}s")
+    # Oversized per-topology queues must stream through refilled slots.
+    per_topology = requests // len(pgs)
+    if per_topology > max_batch:
+        assert fe.stats.refills > 0, "no continuous-batching refills"
+
+    # Bit-identity: every streamed result == its solo equivalent.
+    oracle_cache = PlanCache(maxsize=64)
+    for (pg, req), cold, warm in zip(pairs, cold_results, warm_results):
+        solo = _solo_oracle(pg, req, cfg, reduce_passes, oracle_cache)
+        assert (cold.colors == solo.colors).all(), "cold stream diverged"
+        assert (warm.colors == solo.colors).all(), "warm stream diverged"
+        assert warm.rounds == solo.rounds
+        assert warm.n_colors == solo.n_colors
+        assert warm.comm_bytes_total == solo.comm_bytes_total
+
+    colors = ";".join(
+        f"t{i}_colors="
+        f"{_solo_oracle(pg, {}, cfg, reduce_passes, oracle_cache).n_colors}"
+        for i, pg in enumerate(pgs))
+    s = fe.stats
+    derived = (
+        f"topologies={len(pgs)};requests={requests};"
+        f"req_s_cold={requests / cold_s:.1f};"
+        f"req_s_warm={requests / warm_s:.1f};"
+        f"warm_speedup={cold_s / warm_s:.1f};"
+        f"compile_ms={s.cold_ms:.0f};programs={s.cold_runs};"
+        f"warm_ms_mean={s.warm_ms_mean:.2f};refills={s.refills};"
+        f"reduce_passes={reduce_passes};{colors}"
+    )
+    return row(name, warm_s / requests * 1e6, derived)
+
+
+def _topologies(toy: bool):
+    if toy:
+        graphs = [hex_mesh(8, 6, 6, name="hex_toy"), grid_2d(16, 16),
+                  mycielskian(6)]
+        parts = 4
+    else:
+        graphs = [hex_mesh(16, 12, 12, name="hex_mesh"), grid_2d(48, 48),
+                  mycielskian(8)]
+        parts = 8
+    return [partition_graph(g, parts, strategy="block", second_layer=True)
+            for g in graphs], parts
+
+
+def run(toy: bool = False) -> list[str]:
+    pgs, parts = _topologies(toy)
+    t = 18 if toy else 36
+    rows = [
+        _stream_row(f"serve_stream/mixed3/p{parts}/d1/all_gather", pgs,
+                    requests=t, problem="d1"),
+        _stream_row(f"serve_stream/mixed3/p{parts}/d1/sparse_delta", pgs,
+                    requests=t, problem="d1", exchange="sparse_delta"),
+        _stream_row(f"serve_stream/mixed2/p{parts}/d1/reduce2", pgs[:2],
+                    requests=t // 3 * 2, reduce_passes=2, problem="d1"),
+    ]
+    return rows

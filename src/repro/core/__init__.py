@@ -48,6 +48,7 @@ from repro.core.plan import (
     build_plan,
     default_plan_cache,
     get_plan,
+    plan_key_for,
 )
 from repro.core.quality import (
     QualityReport,
@@ -61,6 +62,7 @@ from repro.core.reduce import (
     get_order,
     get_reduce_plan,
     reduce_colors,
+    reduce_colors_batch,
     register_order,
 )
 
@@ -82,6 +84,7 @@ __all__ = [
     "PlanKey",
     "build_plan",
     "get_plan",
+    "plan_key_for",
     "default_plan_cache",
     "LocalBackend",
     "ReferenceBackend",
@@ -107,5 +110,6 @@ __all__ = [
     "get_order",
     "get_reduce_plan",
     "reduce_colors",
+    "reduce_colors_batch",
     "register_order",
 ]

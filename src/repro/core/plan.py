@@ -33,6 +33,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import time
+import weakref
 from collections import OrderedDict
 from functools import partial
 
@@ -61,6 +62,7 @@ __all__ = [
     "PlanStats",
     "build_plan",
     "get_plan",
+    "plan_key_for",
     "default_plan_cache",
     "cached_device_state",
 ]
@@ -87,6 +89,8 @@ class PlanStats:
     runs: int = 0               # plan.run() invocations
     build_ms: float = 0.0       # host-side static-half cost (state + prepare)
     last_run_ms: float = 0.0
+    compiles: int = 0           # ahead-of-time lower+compile events
+    compile_ms: float = 0.0     # total time spent tracing + compiling
 
 
 # --------------------------------------------------------------------------
@@ -142,6 +146,67 @@ def _build_simulate_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
                     strategy.init_state(st))
 
     return fn, jax.jit(fn, donate_argnums=(1,))
+
+
+def _build_simulate_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
+                         problem: str, recolor_degrees: bool, max_rounds: int,
+                         stats: PlanStats):
+    """One speculate→exchange→detect round as a pure carry transition.
+
+    The continuous-batching slot engine (``repro.serve.coloring``) drives
+    the loop from the host instead of ``lax.while_loop`` so finished vmap
+    slots can be refilled mid-flight.  The carry layout matches
+    ``_make_loop`` exactly, plus the per-request scalars the solo loop
+    keeps in locals; a *fresh* request enters with ``rounds == -1``,
+    ``conf == 1`` (sentinel: must step), ``lose_l = active0`` and
+    ``lose_g`` all-False, so its first transition reproduces the solo
+    loop's initial step bit-for-bit (no loser-zeroing — warm-start colors
+    at active vertices survive, exactly as in ``_make_loop``) and every
+    later transition reproduces the loop body.
+    """
+    step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
+                   backend=backend)
+    recolor = jax.vmap(partial(_recolor_part, **step_kw))
+    detect = jax.vmap(partial(_detect_part, **step_kw))
+    del max_rounds                      # termination is the caller's check
+
+    def step(st, carry):
+        stats.traces += 1       # python side effect: fires only at trace time
+        colors = jnp.where(carry["lose_l"] & (carry["rounds"] >= 0), 0,
+                           carry["colors"])
+        colors = recolor(st, colors, carry["ghost"], carry["lose_l"],
+                         carry["lose_g"])
+        ghost, nbytes, ex_state = strategy.stacked(st, colors,
+                                                   carry["ex_state"])
+        lose_l, lose_g, conf = detect(st, colors, ghost)
+        conf = jnp.sum(conf)
+        rounds = carry["rounds"] + 1
+        return {
+            "colors": colors, "ghost": ghost, "lose_l": lose_l,
+            "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
+            "rounds": rounds, "total": carry["total"] + conf,
+            "bytes": carry["bytes"].at[rounds].set(nbytes),
+        }
+
+    return step
+
+
+def aot_compile(jitted, *args):
+    """Lower + compile ``jitted`` for ``args``: ``(callable, compile_ms)``.
+
+    The returned callable is the XLA executable when ahead-of-time
+    compilation is available (so trace/compile cost is fully paid here and
+    later calls are pure execution — the split the serving accounting
+    reports), or the jitted function itself as a fallback.
+    """
+    t0 = time.perf_counter()
+    try:
+        compiled = jitted.lower(*args).compile()
+    except (AttributeError, NotImplementedError, TypeError):
+        # Version fallback only (missing/incompatible AOT API on the jax
+        # pin); genuine XLA compile errors must propagate.
+        compiled = jitted   # pragma: no cover
+    return compiled, (time.perf_counter() - t0) * 1e3
 
 
 def _build_shard_map_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
@@ -234,8 +299,11 @@ class ColoringPlan:
             self.raw_fn, self._fn = _build_shard_map_fn(
                 strategy, backend, n_parts=pg.n_parts, mesh=mesh,
                 st_keys=list(st_np), **kw)
+            self.raw_step = None        # host-stepped path is simulate-only
         else:
             self.raw_fn, self._fn = _build_simulate_fn(strategy, backend, **kw)
+            self.raw_step = _build_simulate_step(strategy, backend, **kw)
+        self._compiled = None           # AOT executable, built on first run
         self.stats.build_ms = (time.perf_counter() - t0) * 1e3
 
     # -- dynamic half ------------------------------------------------------
@@ -278,9 +346,16 @@ class ColoringPlan:
         """
         t0 = time.perf_counter()
         c0, g0, active0, seed_ = self.request_inputs(color_mask, colors0, seed)
-        colors, rounds, conf, total, nbytes = self._fn(
-            self._st, jnp.asarray(c0), jnp.asarray(g0), jnp.asarray(active0),
-            seed_)
+        args = (self._st, jnp.asarray(c0), jnp.asarray(g0),
+                jnp.asarray(active0), seed_)
+        if self._compiled is None:
+            # Ahead-of-time split: trace+compile cost lands in
+            # ``stats.compile_ms`` so serving accounting can book it as
+            # cold and attribute the execution below to the warm path.
+            self._compiled, dt = aot_compile(self._fn, *args)
+            self.stats.compiles += 1
+            self.stats.compile_ms += dt
+        colors, rounds, conf, total, nbytes = self._compiled(*args)
         res = self._result(colors, rounds, conf, total, nbytes)
         self.stats.runs += 1
         self.stats.last_run_ms = (time.perf_counter() - t0) * 1e3
@@ -353,6 +428,7 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self._plans: OrderedDict = OrderedDict()
+        self._evict_listeners: list = []        # weakrefs to callables
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -365,7 +441,29 @@ class PlanCache:
         return list(self._plans)
 
     def clear(self) -> None:
+        items = list(self._plans.items())
         self._plans.clear()
+        for key, plan in items:
+            self._notify_evicted(key, plan)
+
+    def add_evict_listener(self, listener) -> None:
+        """Call ``listener(key, plan)`` whenever an entry leaves the cache.
+
+        Held by *weak* reference: the serving frontend uses this to drop
+        the compiled executables it keyed to an evicted plan, and dropping
+        the frontend (which owns the listener callable) automatically
+        unregisters it — the cache never keeps a dead service alive.
+        """
+        self._evict_listeners.append(weakref.ref(listener))
+
+    def _notify_evicted(self, key, plan) -> None:
+        live = []
+        for ref in self._evict_listeners:
+            fn = ref()
+            if fn is not None:
+                live.append(ref)
+                fn(key, plan)
+        self._evict_listeners = live
 
     @property
     def total_bytes(self) -> int:
@@ -374,10 +472,10 @@ class PlanCache:
 
     def _evict(self) -> None:
         while len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
+            self._notify_evicted(*self._plans.popitem(last=False))
         if self.max_bytes is not None:
             while len(self._plans) > 1 and self.total_bytes > self.max_bytes:
-                self._plans.popitem(last=False)
+                self._notify_evicted(*self._plans.popitem(last=False))
 
     def get_or_build(self, key, builder):
         plan = self._plans.get(key)
@@ -420,6 +518,27 @@ def _plan_key(pg, *, problem, recolor_degrees, backend, exchange, engine,
         exchange=get_exchange(exchange).name,
         engine=_resolve_engine(engine, pg.n_parts), max_rounds=max_rounds,
     )
+
+
+def plan_key_for(
+    pg: PartitionedGraph,
+    *,
+    problem: str = "d1",
+    recolor_degrees: bool = True,
+    backend: str | LocalBackend = "reference",
+    exchange: str | ExchangeStrategy = "all_gather",
+    engine: str = "auto",
+    max_rounds: int = 64,
+) -> PlanKey:
+    """The :class:`PlanKey` a ``get_plan`` call with these arguments uses.
+
+    Public routing handle for the serving frontend: it maps request
+    topologies to cache keys (and to its per-plan compiled-program
+    tables) without building anything.
+    """
+    return _plan_key(pg, problem=problem, recolor_degrees=recolor_degrees,
+                     backend=backend, exchange=exchange, engine=engine,
+                     max_rounds=max_rounds)
 
 
 def build_plan(

@@ -45,7 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import ColoringResult
-from repro.core.plan import ColoringPlan, PlanCache, default_plan_cache, get_plan
+from repro.core.plan import (
+    ColoringPlan,
+    PlanCache,
+    aot_compile,
+    default_plan_cache,
+    get_plan,
+)
 from repro.core.quality import color_histogram_device
 from repro.core.validate import num_colors
 from repro.graph.partition import PartitionedGraph
@@ -59,6 +65,7 @@ __all__ = [
     "get_order",
     "get_reduce_plan",
     "reduce_colors",
+    "reduce_colors_batch",
     "register_order",
 ]
 
@@ -132,6 +139,8 @@ class ReductionStats:
     selects: int = 0
     passes: int = 0
     reduce_ms: float = 0.0      # total wall time inside reduce_colors
+    compiles: int = 0           # ahead-of-time lower+compile events
+    compile_ms: float = 0.0     # total time spent tracing + compiling
 
 
 class ReductionPlan:
@@ -162,6 +171,7 @@ class ReductionPlan:
             return hist, present.sum(), seq, vrank
 
         self._fn = jax.jit(fn)
+        self._compiled = None
 
     def select(self, colors: np.ndarray):
         """Rank the classes of ``colors``: ``(hist, n_colors, vrank)``.
@@ -171,7 +181,13 @@ class ReductionPlan:
         supersteps ``0 .. n_colors-1`` with ``color_mask = vrank == j``.
         """
         colors = jnp.asarray(np.asarray(colors, np.int32))
-        hist, n_colors, _, vrank = self._fn(colors)
+        if self._compiled is None:
+            # AOT split, same contract as ColoringPlan: compile cost is
+            # probed separately so serving accounting can book it cold.
+            self._compiled, dt = aot_compile(self._fn, colors)
+            self.stats.compiles += 1
+            self.stats.compile_ms += dt
+        hist, n_colors, _, vrank = self._compiled(colors)
         self.stats.selects += 1
         return np.asarray(hist), int(n_colors), np.asarray(vrank)
 
@@ -303,7 +319,6 @@ def reduce_colors(
     colors-by-pass trajectory, and the measured per-pass exchange
     payloads — the communication *price* of the quality gain.
     """
-    t0 = time.perf_counter()
     if isinstance(pg_or_plan, ColoringPlan):
         plan = pg_or_plan
     else:
@@ -312,74 +327,146 @@ def reduce_colors(
             backend=backend, exchange=exchange, engine=engine,
             max_rounds=max_rounds, cache=cache,
         )
+    return reduce_colors_batch(
+        plan, [result], passes=passes, order=order, cache=cache,
+        color_masks=[color_mask],
+    )[0]
+
+
+def reduce_colors_batch(
+    plan: ColoringPlan,
+    results,
+    *,
+    passes: int = 2,
+    order: str = "reverse",
+    cache: PlanCache | None | bool = None,
+    color_masks=None,
+    run_many=None,
+) -> list[ReductionResult]:
+    """Reduce many colorings of one plan with request-axis-batched supersteps.
+
+    The driver behind :func:`reduce_colors` (which is the one-element
+    case), and the batched service's quality path: each pass's superstep
+    ``j`` is issued for *every* still-improving element at once through
+    ``run_many(requests) -> [ColoringResult]`` — the serving layer plugs
+    in its vmap slot engine here, so ``reduce_passes=N`` over a batch
+    costs ~one batched program invocation per superstep instead of
+    serializing elements.  ``run_many=None`` falls back to sequential
+    ``plan.run`` per request (the shard_map engine, and the solo path).
+
+    Element semantics are *identical* to calling :func:`reduce_colors`
+    per element — same trajectories, accounting, and early stopping:
+    each superstep's batch holds exactly the elements with that class
+    index left to rebuild, and elements that stop improving leave the
+    pass loop.
+
+    results / color_masks: per-element ``ColoringResult`` (or raw colors
+    array) and optional ``(n_global,)`` bool masks (see
+    :func:`reduce_colors`); returns one :class:`ReductionResult` each.
+    """
+    t0 = time.perf_counter()
     problem = plan.key.problem
-    colors = np.asarray(
-        result.colors if isinstance(result, ColoringResult) else result,
-        np.int32)
-    if colors.shape != (plan.n_global,):
+    if run_many is None:
+        run_many = lambda reqs: [plan.run(**r) for r in reqs]  # noqa: E731
+    n = len(results)
+    if color_masks is None:
+        color_masks = [None] * n
+    if len(color_masks) != n:
         raise ValueError(
-            f"colors shape {colors.shape} != (n_global,) = ({plan.n_global},)")
-    mask = None
-    if color_mask is not None:
-        mask = np.asarray(color_mask, bool)
-        if mask.shape != colors.shape:
+            f"{len(color_masks)} color_masks for {n} results")
+
+    colors, masks = [], []
+    for e, result in enumerate(results):
+        c = np.asarray(
+            result.colors if isinstance(result, ColoringResult) else result,
+            np.int32)
+        if c.shape != (plan.n_global,):
             raise ValueError(
-                f"color_mask shape {mask.shape} != colors {colors.shape}")
+                f"colors shape {c.shape} != (n_global,) = ({plan.n_global},)")
+        m = color_masks[e]
+        if m is not None:
+            m = np.asarray(m, bool)
+            if m.shape != c.shape:
+                raise ValueError(
+                    f"color_mask shape {m.shape} != colors {c.shape}")
+        colors.append(c)
+        masks.append(m)
 
-    initial = num_colors(colors)
-    max_color = int(colors.max()) if colors.size else 0
-    rplan = get_reduce_plan(plan.n_global, _cap_for(max_color), order,
-                            cache=cache)
+    initial = [num_colors(c) for c in colors]
+    rplans = [
+        get_reduce_plan(plan.n_global,
+                        _cap_for(int(c.max()) if c.size else 0), order,
+                        cache=cache)
+        for c in colors
+    ]
 
-    best = colors
-    best_n = initial
-    colors_by_pass = [initial]
-    comm_by_pass: list[int] = []
-    rounds_by_pass: list[int] = []
-    exchanges_by_pass: list[int] = []
-    converged = True
-    passes_run = 0
+    best = list(colors)
+    best_n = list(initial)
+    colors_by_pass = [[i] for i in initial]
+    comm_by_pass = [[] for _ in range(n)]
+    rounds_by_pass = [[] for _ in range(n)]
+    exchanges_by_pass = [[] for _ in range(n)]
+    converged = [True] * n
+    passes_run = [0] * n
+    improving = [bn > 0 for bn in best_n]
     for _ in range(max(passes, 0)):
-        if best_n == 0:
+        act = [e for e in range(n) if improving[e]]
+        if not act:
             break
         # Rank classes over the reducible vertices only; frozen vertices
         # get vrank == -1 (never rebuilt) and keep their colors in acc.
-        _, n_classes, vrank = rplan.select(
-            best if mask is None else np.where(mask, best, 0))
-        acc = np.zeros_like(best) if mask is None else np.where(mask, 0, best)
-        pass_comm = 0
-        pass_rounds = 0
-        pass_exchanges = 0
-        for j in range(n_classes):
-            r = plan.run(color_mask=vrank == j, colors0=acc)
-            acc = r.colors
-            pass_comm += r.comm_bytes_total
-            pass_rounds += r.rounds
-            pass_exchanges += r.rounds + 1
-            converged &= r.converged
-        passes_run += 1
-        rplan.stats.passes += 1
-        new_n = num_colors(acc)
-        colors_by_pass.append(new_n)
-        comm_by_pass.append(pass_comm)
-        rounds_by_pass.append(pass_rounds)
-        exchanges_by_pass.append(pass_exchanges)
-        if new_n >= best_n:
-            break                       # no improvement: budget unspent
-        best, best_n = acc, new_n
+        n_classes, vrank, acc = {}, {}, {}
+        pass_comm = dict.fromkeys(act, 0)
+        pass_rounds = dict.fromkeys(act, 0)
+        pass_exchanges = dict.fromkeys(act, 0)
+        for e in act:
+            m = masks[e]
+            _, n_classes[e], vrank[e] = rplans[e].select(
+                best[e] if m is None else np.where(m, best[e], 0))
+            acc[e] = (np.zeros_like(best[e]) if m is None
+                      else np.where(m, 0, best[e]))
+        for j in range(max(n_classes[e] for e in act)):
+            sub = [e for e in act if j < n_classes[e]]  # classes left to do
+            rs = run_many([
+                {"color_mask": vrank[e] == j, "colors0": acc[e]} for e in sub
+            ])
+            for e, r in zip(sub, rs):
+                acc[e] = r.colors
+                pass_comm[e] += r.comm_bytes_total
+                pass_rounds[e] += r.rounds
+                pass_exchanges[e] += r.rounds + 1
+                converged[e] &= r.converged
+        for e in act:
+            passes_run[e] += 1
+            rplans[e].stats.passes += 1
+            new_n = num_colors(acc[e])
+            colors_by_pass[e].append(new_n)
+            comm_by_pass[e].append(pass_comm[e])
+            rounds_by_pass[e].append(pass_rounds[e])
+            exchanges_by_pass[e].append(pass_exchanges[e])
+            if new_n >= best_n[e]:
+                improving[e] = False    # no improvement: budget unspent
+            else:
+                best[e], best_n[e] = acc[e], new_n
 
-    rplan.stats.reduce_ms += (time.perf_counter() - t0) * 1e3
-    return ReductionResult(
-        colors=best,
-        n_colors=best_n,
-        initial_n_colors=initial,
-        improved=best_n < initial,
-        passes_run=passes_run,
-        colors_by_pass=colors_by_pass,
-        comm_bytes_by_pass=comm_by_pass,
-        rounds_by_pass=rounds_by_pass,
-        exchanges_by_pass=exchanges_by_pass,
-        converged=converged,
-        order=order,
-        problem=problem,
-    )
+    dt = (time.perf_counter() - t0) * 1e3
+    distinct = list({id(r): r for r in rplans}.values())
+    for rplan in distinct:              # split so the totals sum to wall time
+        rplan.stats.reduce_ms += dt / len(distinct)
+    return [
+        ReductionResult(
+            colors=best[e],
+            n_colors=best_n[e],
+            initial_n_colors=initial[e],
+            improved=best_n[e] < initial[e],
+            passes_run=passes_run[e],
+            colors_by_pass=colors_by_pass[e],
+            comm_bytes_by_pass=comm_by_pass[e],
+            rounds_by_pass=rounds_by_pass[e],
+            exchanges_by_pass=exchanges_by_pass[e],
+            converged=converged[e],
+            order=order,
+            problem=problem,
+        )
+        for e in range(n)
+    ]

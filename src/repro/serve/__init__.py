@@ -1,5 +1,5 @@
-"""Serving layer: token generation + batched graph-recoloring service."""
-from repro.serve.coloring import ColoringService, ServiceStats
+"""Serving layer: token generation + continuous-batching recoloring."""
+from repro.serve.coloring import ColoringFrontend, ColoringService, ServiceStats
 from repro.serve.engine import ServeEngine
 
-__all__ = ["ServeEngine", "ColoringService", "ServiceStats"]
+__all__ = ["ServeEngine", "ColoringFrontend", "ColoringService", "ServiceStats"]

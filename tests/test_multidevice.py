@@ -161,6 +161,50 @@ print("OK")
     assert "OK" in out
 
 
+def test_frontend_stream_shard_map():
+    """The cross-topology frontend under the shard_map engine: requests
+    execute sequentially through each plan's warm path, still routed per
+    topology, with results (including reduce_passes) bit-identical to
+    the simulate engine and to solo runs."""
+    out = run_py("""
+import numpy as np
+from repro.graph.generators import hex_mesh, rmat
+from repro.graph.partition import partition_graph
+from repro.core.plan import PlanCache, get_plan
+from repro.core.reduce import reduce_colors
+from repro.serve import ColoringFrontend
+from repro.core.validate import is_proper_d1
+
+g1 = hex_mesh(24, 8, 8)
+g2 = rmat(8, 6, seed=5)
+pg1 = partition_graph(g1, 8, second_layer=True)
+pg2 = partition_graph(g2, 8, strategy="edge_balanced", second_layer=True)
+cache = PlanCache()
+fe = ColoringFrontend(engine="shard_map", cache=cache, reduce_passes=1)
+pairs = []
+for _ in range(2):
+    for pg in (pg1, pg2):
+        pairs.append((pg, {}))
+        pairs.append((pg, {"color_mask": np.arange(pg.n_global) % 2 == 0}))
+results = fe.run_stream(pairs)
+oracle = PlanCache()
+for (pg, req), res in zip(pairs, results):
+    plan = get_plan(pg, engine="simulate", cache=oracle)
+    base = plan.run(**req)
+    red = reduce_colors(plan, base, passes=1, cache=oracle,
+                        color_mask=req.get("color_mask"))
+    solo = red.merged_result(base)
+    assert (res.colors == solo.colors).all()
+    assert res.n_colors == solo.n_colors
+    assert res.rounds == solo.rounds
+assert fe.stats.requests == len(pairs)
+assert fe.stats.warm_requests == len(pairs)
+assert is_proper_d1(g1, results[0].colors)
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_reduce_colors_shard_map():
     """The color-reduction subsystem through the shard_map engine: never
     more colors, proper, conflict-free supersteps, and bit-identical to

@@ -281,31 +281,40 @@ def test_service_batch_bit_identical_to_solo():
             assert b.rounds == solo.rounds
             assert b.total_conflicts == solo.total_conflicts
             assert list(b.comm_bytes_by_round) == list(solo.comm_bytes_by_round)
-    assert sorted(svc._batched) == [4, 8]             # bucketed, not per-size
+    assert svc.buckets == [4, 8]                      # bucketed, not per-size
 
 
 def test_service_stats_cold_vs_warm():
+    """Accounting splits trace/compile from execution: cold_ms holds only
+    program builds, and every request's execution — including the ones
+    riding a bucket's first batch — is attributed to the warm path."""
     svc = ColoringService(PG, engine="simulate", cache=PlanCache())
     svc.submit()
-    assert svc.stats.cold_runs == 1
-    assert svc.stats.cold_ms > 0 and svc.stats.warm_requests == 0
+    assert svc.stats.cold_runs == 1                   # the plan program
+    assert svc.stats.cold_ms > 0
+    assert svc.stats.warm_requests == 1               # execution is warm
     for _ in range(3):
         svc.submit()
     assert svc.stats.requests == 4
     assert svc.stats.cold_runs == 1
-    assert svc.stats.warm_requests == 3
+    assert svc.stats.warm_requests == 4
     assert svc.stats.warm_ms_mean > 0
-    # Steady state beats the cold request (compile amortized away).
+    # Per-request execution is far below the compile cost it amortizes.
     assert svc.stats.warm_ms_mean < svc.stats.cold_ms
-    # A first-use batch bucket compiles -> booked cold, not warm; a repeat
-    # of the same bucket is warm.
-    warm_before = svc.stats.warm_requests
+    # A first-use batch bucket compiles its step+refill programs (cold
+    # events), but the N requests it carried still book as warm — the
+    # mean no longer overstates steady-state latency early in a stream.
+    cold_before, warm_before = svc.stats.cold_runs, svc.stats.warm_requests
+    cold_ms_before = svc.stats.cold_ms
     svc.run_batch([{}, {}])
-    assert svc.stats.cold_runs == 2
-    assert svc.stats.warm_requests == warm_before
-    svc.run_batch([{}, {}])
-    assert svc.stats.cold_runs == 2
+    assert svc.stats.cold_runs == cold_before + 2     # step + refill
+    assert svc.stats.cold_ms > cold_ms_before
     assert svc.stats.warm_requests == warm_before + 2
+    cold_after, cold_ms_after = svc.stats.cold_runs, svc.stats.cold_ms
+    svc.run_batch([{}, {}])
+    assert svc.stats.cold_runs == cold_after          # bucket reused
+    assert svc.stats.cold_ms == cold_ms_after
+    assert svc.stats.warm_requests == warm_before + 4
 
 
 def test_service_empty_and_single_batches():

@@ -1,0 +1,234 @@
+"""Continuous-batching serving frontend (ISSUE-5).
+
+Covers the tentpole and the satellite bugfixes:
+
+* cross-topology routing through the plan cache, results bit-identical
+  to solo ``plan.run`` (including ``reduce_passes > 0`` batches);
+* slot refill from the pending queue (continuous batching) instead of
+  waiting for a bucket to drain;
+* stats attribution: ``cold_ms`` holds trace/compile only, every
+  request's execution is warm;
+* compiled bucket executables are keyed per plan and dropped when the
+  plan cache evicts the plan (or the frontend is dropped);
+* the reduction plan is resolved once per service and reused across
+  requests even with ``cache=False`` (zero retraces).
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.plan import PlanCache, get_plan
+from repro.core.reduce import ReductionPlan, reduce_colors
+from repro.core.validate import is_proper_d1
+from repro.graph.generators import grid_2d, hex_mesh, mycielskian
+from repro.graph.partition import partition_graph
+from repro.serve import ColoringFrontend, ColoringService
+
+GRAPHS = {
+    "hex": hex_mesh(6, 4, 4),
+    "grid": grid_2d(12, 12),
+    "myc": mycielskian(6),
+}
+PGS = {name: partition_graph(g, 3, strategy="block", second_layer=True)
+       for name, g in GRAPHS.items()}
+
+
+def _mixed_stream(reps: int = 2):
+    """Interleaved mixed-topology, mixed-request stream."""
+    pairs = []
+    for _ in range(reps):
+        for name, pg in PGS.items():
+            n = pg.n_global
+            pairs.append((pg, {}))
+            pairs.append((pg, {"color_mask": np.arange(n) % 2 == 0}))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: mixed-topology streams, bit-identical to solo runs.
+# ---------------------------------------------------------------------------
+
+def test_frontend_mixed_topology_stream_bit_identical():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache())
+    pairs = _mixed_stream()
+    results = fe.run_stream(pairs)
+    assert len(results) == len(pairs)
+    for (pg, req), res in zip(pairs, results):
+        plan = get_plan(pg, engine="simulate", cache=fe.cache)
+        solo = plan.run(**req)
+        assert (res.colors == solo.colors).all()
+        assert res.rounds == solo.rounds
+        assert res.n_colors == solo.n_colors
+        assert res.total_conflicts == solo.total_conflicts
+        assert list(res.comm_bytes_by_round) == list(solo.comm_bytes_by_round)
+    # One slot group per topology; O(log max_batch) programs each.
+    assert len(fe._groups) == len(PGS)
+    for group in fe._groups.values():
+        assert len(group.compiled_buckets) == 1
+
+
+def test_frontend_stream_warm_path_no_retrace_no_rebuild(monkeypatch):
+    """After each topology's first batch the stream runs entirely warm:
+    zero retraces (trace probe) and zero host state rebuilds."""
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache())
+    pairs = _mixed_stream()
+    fe.run_stream(pairs)                              # warm-up
+    plans = [g.plan for g in fe._groups.values()]
+    traces = [p.stats.traces for p in plans]
+    cold_runs = fe.stats.cold_runs
+
+    def _forbidden(*a, **kw):
+        raise AssertionError("warm stream rebuilt host state")
+
+    monkeypatch.setattr(plan_mod, "build_device_state", _forbidden)
+    again = fe.run_stream(pairs)
+    assert [p.stats.traces for p in plans] == traces  # zero retraces
+    assert fe.stats.cold_runs == cold_runs            # zero new compiles
+    assert all(is_proper_d1(GRAPHS["hex"], r.colors)
+               for (pg, req), r in zip(pairs, again)
+               if pg is PGS["hex"] and not req)
+
+
+def test_frontend_signature_routing():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache())
+    sig = fe.register(PGS["grid"])
+    assert sig == PGS["grid"].signature
+    t = fe.enqueue(sig, {})
+    out = fe.drain()
+    assert is_proper_d1(GRAPHS["grid"], out[t].colors)
+    with pytest.raises(KeyError, match="unknown topology signature"):
+        fe.enqueue("not-a-signature", {})
+    with pytest.raises(TypeError, match="unknown request keys"):
+        fe.enqueue(sig, {"mask": None})
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: finished slots refill from the pending queue.
+# ---------------------------------------------------------------------------
+
+def test_slots_refill_from_pending_queue():
+    svc = ColoringService(PGS["hex"], engine="simulate", cache=PlanCache(),
+                          max_batch=4)
+    n = PGS["hex"].n_global
+    masks = [None, np.arange(n) < n // 2, np.arange(n) % 2 == 0,
+             np.arange(n) % 3 != 0, np.arange(n) >= n // 3]
+    reqs = [{"color_mask": m} for m in masks * 2]     # 10 requests, 4 slots
+    outs = svc.run_batch(reqs)
+    assert len(outs) == len(reqs)
+    for req, out in zip(reqs, outs):
+        solo = svc.plan.run(**req)
+        assert (out.colors == solo.colors).all()
+        assert out.rounds == solo.rounds
+    # The queue streamed through refilled slots: one bucket, no 8/16
+    # programs, and at least one mid-wave refill happened.
+    assert svc.buckets == [4]
+    assert svc.stats.refills > 0
+    assert svc.stats.batches == 1
+    assert svc.stats.warm_requests == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: executables are keyed per plan and die with it.
+# ---------------------------------------------------------------------------
+
+def test_executables_evicted_with_plan():
+    cache = PlanCache(maxsize=1)
+    fe = ColoringFrontend(engine="simulate", cache=cache)
+    fe.run_stream([(PGS["hex"], {})] * 2)
+    key_hex = next(iter(fe._groups))
+    programs_one_topology = fe.n_programs
+    assert programs_one_topology > 0
+    # Routing a second topology evicts the first plan (maxsize=1): the
+    # frontend must drop the evicted plan's compiled programs with it.
+    fe.run_stream([(PGS["grid"], {})] * 2)
+    assert key_hex not in fe._groups
+    assert len(fe._groups) == 1
+    assert fe.n_programs == programs_one_topology     # grid's only
+    # The evicted topology still serves (plan + programs rebuilt).
+    [res] = fe.run_stream([(PGS["hex"], {})])
+    assert is_proper_d1(GRAPHS["hex"], res.colors)
+    # close() releases everything.
+    fe.close()
+    assert fe.n_programs == 0 and not fe._groups
+
+
+def test_eviction_mid_stream_keeps_in_flight_results():
+    """A cache too small for the stream thrashes plans, but in-flight
+    requests pin their retired group and still complete bit-identically."""
+    cache = PlanCache(maxsize=1)
+    fe = ColoringFrontend(engine="simulate", cache=cache)
+    pairs = [(PGS["hex"], {}), (PGS["grid"], {}),
+             (PGS["hex"], {"color_mask": np.arange(PGS["hex"].n_global) % 2 == 0})]
+    results = fe.run_stream(pairs)
+    oracle = PlanCache(maxsize=8)
+    for (pg, req), res in zip(pairs, results):
+        solo = get_plan(pg, engine="simulate", cache=oracle).run(**req)
+        assert (res.colors == solo.colors).all()
+    assert not fe._retired                            # drained, then dropped
+
+
+# ---------------------------------------------------------------------------
+# Satellite: reduce-plan reuse (cache=False must not rebuild per request).
+# ---------------------------------------------------------------------------
+
+def test_reduce_plan_resolved_once_across_requests():
+    svc = ColoringService(PGS["hex"], engine="simulate", cache=False,
+                          reduce_passes=2)
+    svc.submit()
+    rplans = [p for p in svc._frontend.cache._plans.values()
+              if isinstance(p, ReductionPlan)]
+    assert len(rplans) == 1                           # resolved once, cached
+    rplan = rplans[0]
+    probes = (rplan.stats.traces, rplan.stats.compiles)
+    n_entries = len(svc._frontend.cache._plans)
+    svc.submit()
+    svc.run_batch([{}, {}])
+    assert (rplan.stats.traces, rplan.stats.compiles) == probes
+    assert len(svc._frontend.cache._plans) == n_entries
+    assert [p for p in svc._frontend.cache._plans.values()
+            if isinstance(p, ReductionPlan)] == [rplan]
+
+
+# ---------------------------------------------------------------------------
+# Batched reduction: streams with reduce_passes match solo reduce exactly.
+# ---------------------------------------------------------------------------
+
+def test_stream_with_reduction_matches_solo():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(),
+                          reduce_passes=2)
+    pairs = _mixed_stream(reps=1)
+    results = fe.run_stream(pairs)
+    oracle = PlanCache()
+    for (pg, req), res in zip(pairs, results):
+        plan = get_plan(pg, engine="simulate", cache=oracle)
+        base = plan.run(**req)
+        red = reduce_colors(plan, base, passes=2, cache=oracle,
+                            color_mask=req.get("color_mask"))
+        solo = red.merged_result(base)
+        assert (res.colors == solo.colors).all()
+        assert res.n_colors == solo.n_colors
+        assert res.rounds == solo.rounds
+        assert res.comm_bytes_total == solo.comm_bytes_total
+        assert res.converged == solo.converged
+
+
+# ---------------------------------------------------------------------------
+# Stats attribution (frontend-level; the service-level pin lives in
+# test_plan.py::test_service_stats_cold_vs_warm).
+# ---------------------------------------------------------------------------
+
+def test_frontend_stats_attribution():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache())
+    pairs = _mixed_stream(reps=1)
+    fe.run_stream(pairs)
+    # Every admitted request's execution landed warm; cold events are the
+    # per-topology step+refill compiles and nothing else.
+    assert fe.stats.requests == len(pairs)
+    assert fe.stats.warm_requests == len(pairs)
+    assert fe.stats.cold_runs == 2 * len(PGS)
+    assert fe.stats.cold_ms > 0
+    assert 0 < fe.stats.warm_ms_mean < fe.stats.cold_ms
+    cold = (fe.stats.cold_runs, fe.stats.cold_ms)
+    fe.run_stream(pairs)                              # fully warm repeat
+    assert (fe.stats.cold_runs, fe.stats.cold_ms) == cold
+    assert fe.stats.warm_requests == 2 * len(pairs)
