@@ -8,10 +8,17 @@ and (b) the op-level call graph for the roofline discussion.  ``derived``
 Beyond the raw kernels, the ``backend/*`` rows time the *composed*
 per-part steps (full local-coloring fixed point + conflict sweep) through
 the ``LocalBackend`` interface — the unit the distributed loop actually
-dispatches per round — for both the reference and pallas backends.
+dispatches per round — for reference, pallas, and the ``pallas_fused``
+megakernel; the ``roofline/*`` rows compare the *lowered one-round
+programs* of the chained and fused pallas paths by summing HBM traffic
+over the optimized HLO (``repro.roofline.analysis.hlo_totals``), and the
+run fails if the fused round is not strictly cheaper — the megakernel's
+byte win is measured, not asserted.  ``toy=True`` (the CI
+``kernels_smoke`` suite) shrinks the graph but keeps every row.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,11 +28,12 @@ from repro.core.distributed import build_device_state
 from repro.graph.generators import rmat
 from repro.graph.partition import partition_graph
 from repro.kernels import ops, ref
+from repro.roofline.analysis import hlo_totals
 
 
-def run() -> list[str]:
+def run(toy: bool = False) -> list[str]:
     rows = []
-    g = rmat(10, 8, seed=3)
+    g = rmat(8, 6, seed=3) if toy else rmat(10, 8, seed=3)
     pg = partition_graph(g, 2, second_layer=True)
     st = build_device_state(pg, "d2")
     nl = pg.n_local
@@ -76,10 +84,26 @@ def run() -> list[str]:
     rows.append(row("kernel/pair_scatter/pallas_interp", us_k, f"match_ref={ok}"))
     rows.append(row("kernel/pair_scatter/jnp_ref", us_r, "oracle"))
 
+    # Fused round megakernel vs the decomposed oracle (d1 boundary/state).
+    bnd1 = jnp.asarray(pg.is_boundary[0])
+    colors0 = tab[:nl]
+    ghost0 = tab[nl:nl + pg.n_ghost]
+    fr_k, us_k = timed(lambda: ops.fused_round(
+        adj, colors0, ghost0, deg_tab, gid_tab, bnd1, problem="d1"))
+    fr_r, us_r = timed(lambda: ref.fused_round_ref(
+        adj, colors0, ghost0, deg_tab, gid_tab, bnd1, problem="d1"))
+    ok = all(bool((np.asarray(a) == np.asarray(b)).all())
+             for a, b in zip(fr_k, fr_r))
+    rows.append(row("kernel/fused_round/pallas_interp", us_k, f"match_ref={ok}"))
+    rows.append(row("kernel/fused_round/jnp_ref", us_r, "oracle"))
+
     # Composed backend steps (the distributed loop's per-round unit).
+    st0 = {"adj_cidx": adj, "deg_tab": deg_tab, "gid_tab": gid_tab,
+           "is_boundary": bnd1}
     tab0 = jnp.zeros_like(tab)
     outs = {}
-    for name in ("reference", "pallas"):
+    rounds = {}
+    for name in ("reference", "pallas", "pallas_fused"):
         b = get_backend(name)
         (colored), us_c = timed(lambda b=b: b.color_d1(
             adj, tab0, active, deg_tab, gid_tab, recolor_degrees=True))
@@ -95,6 +119,41 @@ def run() -> list[str]:
             partial_d2=False, recolor_degrees=True))
         rows.append(row(f"backend/{name}/color_d2", us_2,
                         f"colors={int(np.unique(np.asarray(c2)[np.asarray(c2) > 0]).size)}"))
-    ok = bool((outs["reference"] == outs["pallas"]).all())
+        rnd, us_rd = timed(lambda b=b: b.round(
+            st0, colors0, ghost0, problem="d1", recolor_degrees=True))
+        rounds[name] = [np.asarray(x) for x in rnd]
+        rows.append(row(f"backend/{name}/round_d1", us_rd,
+                        f"conflicts={int(rounds[name][3])}"))
+    ok = bool((outs["reference"] == outs["pallas"]).all()
+              & (outs["reference"] == outs["pallas_fused"]).all())
     rows.append(row("backend/parity/color_d1", 0, f"identical={ok}"))
+    ok = all(bool((rounds["reference"][i] == rounds[name][i]).all())
+             for name in ("pallas", "pallas_fused") for i in range(4))
+    rows.append(row("backend/parity/round_d1", 0, f"identical={ok}"))
+
+    # Roofline: HBM bytes of the *lowered* one-round programs.  Both
+    # programs are jitted over the same closed-over part-0 state, lowered,
+    # compiled, and their optimized HLO summed by hlo_totals — while-loop
+    # bodies scaled by their trip-count bound.  The chained path pays the
+    # serialized per-edge ghost-lose scatter and re-reads the color table
+    # per sub-program; the megakernel's ballot-style sweep avoids both.
+    hbytes = {}
+    for name in ("pallas", "pallas_fused"):
+        b = get_backend(name)
+
+        def one_round(c, gh, b=b):
+            return b.round(st0, c, gh, problem="d1", recolor_degrees=True)
+
+        text = jax.jit(one_round).lower(colors0, ghost0).compile().as_text()
+        hbytes[name] = int(hlo_totals(text)["hlo_bytes_per_dev"])
+        rows.append(row(f"roofline/round_d1/{name}", 0,
+                        f"hlo_bytes_per_round={hbytes[name]}"))
+    if hbytes["pallas_fused"] >= hbytes["pallas"]:
+        raise RuntimeError(
+            "fused round must be strictly cheaper than the chained path: "
+            f"fused={hbytes['pallas_fused']} chained={hbytes['pallas']}")
+    rows.append(row(
+        "roofline/round_d1/fused_vs_chained", 0,
+        f"fused={hbytes['pallas_fused']} chained={hbytes['pallas']} "
+        f"ratio={hbytes['pallas_fused'] / hbytes['pallas']:.4f}"))
     return rows

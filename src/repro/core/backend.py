@@ -20,7 +20,6 @@ this.  Select with ``color_distributed(..., backend="pallas")`` or
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.conflict import v_loses
@@ -30,6 +29,7 @@ __all__ = [
     "LocalBackend",
     "ReferenceBackend",
     "PallasBackend",
+    "PallasFusedBackend",
     "BACKENDS",
     "get_backend",
     "register_backend",
@@ -67,6 +67,30 @@ class LocalBackend:
         the ghost table by the caller), and the conflict count.
         """
         raise NotImplementedError
+
+    def round(self, st, colors_loc, ghost_colors, *, problem: str,
+              recolor_degrees: bool):
+        """One fused inner round: detect conflicts against the freshly
+        exchanged ghosts, zero the losers, and speculatively recolor them
+        for the next round.
+
+        Returns ``(new_colors (nl,), lose_loc (nl,) bool, lose_ghost (G,)
+        bool, n_conflicts scalar int32)``.  The default implementation is
+        the decomposed ``_detect_part`` → ``_recolor_part`` composition,
+        so ``reference`` and plain ``pallas`` stay bit-identical oracles
+        for backends that override this with a fused kernel
+        (``pallas_fused``).
+        """
+        from repro.core.distributed import _detect_part, _recolor_part
+
+        kw = dict(problem=problem, recolor_degrees=recolor_degrees,
+                  backend=self)
+        lose_l, lose_g, conf = _detect_part(st, colors_loc, ghost_colors,
+                                            **kw)
+        colors = jnp.where(lose_l, 0, colors_loc)
+        colors = _recolor_part(st, colors, ghost_colors, lose_l, lose_g,
+                               **kw)
+        return colors, lose_l, lose_g, conf
 
 
 class ReferenceBackend(LocalBackend):
@@ -117,7 +141,9 @@ class PallasBackend(LocalBackend):
     def __init__(self, *, interpret: bool | None = None,
                  tile_d1: int = 256, tile_d2: int = 128):
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            from repro.kernels import default_interpret
+
+            interpret = default_interpret()
         self.interpret = interpret
         self.tile_d1 = tile_d1
         self.tile_d2 = tile_d2
@@ -156,9 +182,50 @@ class PallasBackend(LocalBackend):
         return lose_v, lose_o, count.astype(jnp.int32)
 
 
+class PallasFusedBackend(PallasBackend):
+    """Megakernel backend: one ``pallas_call`` per inner round.
+
+    Overrides :meth:`LocalBackend.round` with
+    ``kernels.fused_round.fused_round`` — speculation, ghost-pair
+    scatter, and Alg-4 conflict detection fused into a single tiled
+    program, so the color table is read from HBM once per round instead
+    of four times (see ``benchmarks/bench_kernels.py`` roofline rows).
+    ``d1_2gl`` recolors ghosts over the extended adjacency and falls
+    back to the decomposed round.  Bit-identical to ``reference`` /
+    ``pallas`` by construction (``tests/test_kernels.py -k fused``).
+    """
+
+    name = "pallas_fused"
+
+    def __init__(self, *, interpret: bool | None = None,
+                 tile_d1: int = 256, tile_d2: int = 128,
+                 tile_round: int = 256):
+        super().__init__(interpret=interpret, tile_d1=tile_d1,
+                         tile_d2=tile_d2)
+        self.tile_round = tile_round
+
+    def round(self, st, colors_loc, ghost_colors, *, problem: str,
+              recolor_degrees: bool):
+        if problem == "d1_2gl":
+            return super().round(st, colors_loc, ghost_colors,
+                                 problem=problem,
+                                 recolor_degrees=recolor_degrees)
+        from repro.kernels.fused_round import fused_round
+
+        return fused_round(
+            st["adj_cidx"], colors_loc, ghost_colors, st["deg_tab"],
+            st["gid_tab"], st["is_boundary"],
+            two_hop_cidx=(st["two_hop_cidx"] if problem in ("d2", "pd2")
+                          else None),
+            problem=problem, recolor_degrees=recolor_degrees,
+            tile=self.tile_round, interpret=self.interpret,
+        )
+
+
 BACKENDS: dict[str, type[LocalBackend]] = {
     "reference": ReferenceBackend,
     "pallas": PallasBackend,
+    "pallas_fused": PallasFusedBackend,
 }
 
 

@@ -206,12 +206,21 @@ def _detect_part(st, colors_loc, ghost_colors, *, problem: str,
     return lose_loc, lose_tab[n_loc:pad_cidx], n_conf
 
 
+def _round_part(st, colors_loc, ghost_colors, *, problem: str,
+                recolor_degrees: bool, backend: LocalBackend | None = None):
+    """One fused inner round of one part: detect → zero losers →
+    speculative recolor for the next round (``LocalBackend.round``)."""
+    backend = backend or _REFERENCE
+    return backend.round(st, colors_loc, ghost_colors, problem=problem,
+                         recolor_degrees=recolor_degrees)
+
+
 # ---------------------------------------------------------------------------
 # Shared loop driver (engine-agnostic).
 # ---------------------------------------------------------------------------
 
-def _make_loop(recolor, detect, exchange, all_sum, *, max_rounds: int):
-    """Build the speculate→exchange→detect loop from engine primitives.
+def _make_loop(recolor, round_fn, exchange, all_sum, *, max_rounds: int):
+    """Build the speculate→exchange→round loop from engine primitives.
 
     Both engines call this with the *same* per-part step functions — the
     ``shard_map`` engine binds per-device state + ``lax`` collectives, the
@@ -219,15 +228,23 @@ def _make_loop(recolor, detect, exchange, all_sum, *, max_rounds: int):
     they provably execute identical math.
 
       recolor(colors, ghost, active_local, active_ghost) -> colors
-      detect(colors, ghost) -> (lose_local, lose_ghost, n_conflicts)
+      round_fn(colors, ghost) -> (colors, lose_local, lose_ghost, n_confl)
       exchange(colors, ex_state) -> (ghost, payload_bytes, ex_state)
       all_sum(x) -> global scalar (psum / sum over the part axis)
+
+    ``round_fn`` fuses conflict detection with the *next* round's
+    speculative recoloring (``LocalBackend.round``): detect round k and
+    recolor round k+1 read the same (colors, ghost) tables, so fusing
+    them halves table reads, whereas the former recolor→detect body was
+    split by the exchange.  The rotation is bit-exact: at convergence
+    the trailing recolor has an all-false active mask and is the
+    identity, so the returned colors equal the unrotated loop's.
     """
 
     def loop(colors0, zeros_ghost, active0, no_ghost_active, ex_state0):
         colors = recolor(colors0, zeros_ghost, active0, no_ghost_active)
         ghost, nbytes, ex_state = exchange(colors, ex_state0)
-        lose_l, lose_g, conf = detect(colors, ghost)
+        colors, lose_l, lose_g, conf = round_fn(colors, ghost)
         conf = all_sum(conf)
         bytes_hist = jnp.zeros((max_rounds + 1,), jnp.int32).at[0].set(nbytes)
         carry = {
@@ -240,10 +257,8 @@ def _make_loop(recolor, detect, exchange, all_sum, *, max_rounds: int):
             return (c["conf"] > 0) & (c["rounds"] < max_rounds)
 
         def body(c):
-            colors = jnp.where(c["lose_l"], 0, c["colors"])
-            colors = recolor(colors, c["ghost"], c["lose_l"], c["lose_g"])
-            ghost, nbytes, ex_state = exchange(colors, c["ex_state"])
-            lose_l, lose_g, conf = detect(colors, ghost)
+            ghost, nbytes, ex_state = exchange(c["colors"], c["ex_state"])
+            colors, lose_l, lose_g, conf = round_fn(c["colors"], ghost)
             conf = all_sum(conf)
             rounds = c["rounds"] + 1
             return {

@@ -45,10 +45,10 @@ from repro.compat import shard_map as _shard_map
 from repro.core.backend import LocalBackend, get_backend
 from repro.core.distributed import (
     ColoringResult,
-    _detect_part,
     _gather_colors,
     _make_loop,
     _recolor_part,
+    _round_part,
     build_device_state,
 )
 from repro.core.exchange import ExchangeStrategy, get_exchange
@@ -126,17 +126,26 @@ def cached_device_state(pg: PartitionedGraph, problem: str) -> dict[str, np.ndar
 def _build_simulate_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
                        problem: str, recolor_degrees: bool, max_rounds: int,
                        stats: PlanStats):
+    """The raw loop program ``fn(st, colors0, ghost0, active0, seed)``.
+
+    The plan jits ``partial(fn, plan._st)`` — the static tables become
+    *closure constants* of the compiled program (XLA hoists them into
+    device-resident donated-free parameters), so warm ``plan.run()``
+    calls transfer only the per-request inputs instead of re-feeding
+    every table (pinned by the transfer-guard probe in
+    ``tests/test_plan.py``).
+    """
     step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
                    backend=backend)
     recolor = jax.vmap(partial(_recolor_part, **step_kw))
-    detect = jax.vmap(partial(_detect_part, **step_kw))
+    round_ = jax.vmap(partial(_round_part, **step_kw))
 
     def fn(st, colors0, ghost0, active0, seed):
         stats.traces += 1       # python side effect: fires only at trace time
         del seed                # deterministic runtime; reserved request input
         loop = _make_loop(
             lambda colors, ghost, al, ag: recolor(st, colors, ghost, al, ag),
-            lambda colors, ghost: detect(st, colors, ghost),
+            lambda colors, ghost: round_(st, colors, ghost),
             partial(strategy.stacked, st),
             jnp.sum,
             max_rounds=max_rounds,
@@ -145,13 +154,13 @@ def _build_simulate_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
                     jnp.zeros(st["ghost_real"].shape, bool),
                     strategy.init_state(st))
 
-    return fn, jax.jit(fn, donate_argnums=(1,))
+    return fn
 
 
 def _build_simulate_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
                          problem: str, recolor_degrees: bool, max_rounds: int,
                          stats: PlanStats):
-    """One speculate→exchange→detect round as a pure carry transition.
+    """One speculate→exchange→round transition of the carry.
 
     The continuous-batching slot engine (``repro.serve.coloring``) drives
     the loop from the host instead of ``lax.while_loop`` so finished vmap
@@ -160,25 +169,26 @@ def _build_simulate_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
     keeps in locals; a *fresh* request enters with ``rounds == -1``,
     ``conf == 1`` (sentinel: must step), ``lose_l = active0`` and
     ``lose_g`` all-False, so its first transition reproduces the solo
-    loop's initial step bit-for-bit (no loser-zeroing — warm-start colors
-    at active vertices survive, exactly as in ``_make_loop``) and every
-    later transition reproduces the loop body.
+    loop's initial step bit-for-bit (the initial speculative coloring of
+    the request's active set) and every later transition reproduces the
+    loop body — where the carried colors were already recolored by the
+    previous fused round, so the leading recolor is masked to an
+    all-false active set (an identity pass-through).
     """
     step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
                    backend=backend)
     recolor = jax.vmap(partial(_recolor_part, **step_kw))
-    detect = jax.vmap(partial(_detect_part, **step_kw))
+    round_ = jax.vmap(partial(_round_part, **step_kw))
     del max_rounds                      # termination is the caller's check
 
     def step(st, carry):
         stats.traces += 1       # python side effect: fires only at trace time
-        colors = jnp.where(carry["lose_l"] & (carry["rounds"] >= 0), 0,
-                           carry["colors"])
-        colors = recolor(st, colors, carry["ghost"], carry["lose_l"],
-                         carry["lose_g"])
+        fresh = carry["rounds"] < 0
+        colors = recolor(st, carry["colors"], carry["ghost"],
+                         carry["lose_l"] & fresh, carry["lose_g"] & fresh)
         ghost, nbytes, ex_state = strategy.stacked(st, colors,
                                                    carry["ex_state"])
-        lose_l, lose_g, conf = detect(st, colors, ghost)
+        colors, lose_l, lose_g, conf = round_(st, colors, ghost)
         conf = jnp.sum(conf)
         rounds = carry["rounds"] + 1
         return {
@@ -225,7 +235,7 @@ def _build_shard_map_fn(strategy: ExchangeStrategy, backend: LocalBackend, *,
         st = {k: v[0] for k, v in st.items()}           # strip part axis
         loop = _make_loop(
             partial(_recolor_part, st, **step_kw),
-            partial(_detect_part, st, **step_kw),
+            partial(_round_part, st, **step_kw),
             partial(strategy.device, st, axis="p", n_parts=n_parts),
             partial(jax.lax.psum, axis_name="p"),
             max_rounds=max_rounds,
@@ -296,13 +306,29 @@ class ColoringPlan:
         kw = dict(problem=key.problem, recolor_degrees=key.recolor_degrees,
                   max_rounds=key.max_rounds, stats=self.stats)
         if key.engine == "shard_map":
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            if mesh is None:
+                mesh = jax.make_mesh((pg.n_parts,), ("p",))
             self.raw_fn, self._fn = _build_shard_map_fn(
                 strategy, backend, n_parts=pg.n_parts, mesh=mesh,
                 st_keys=list(st_np), **kw)
             self.raw_step = None        # host-stepped path is simulate-only
+            # Upload the static tables once, already laid out over the
+            # mesh: without this every plan.run() implicitly re-shards
+            # (re-transfers) the whole state dict into the executable.
+            self._st = jax.device_put(
+                self._st, NamedSharding(mesh, PartitionSpec("p")))
+            self._st_is_arg = True
         else:
-            self.raw_fn, self._fn = _build_simulate_fn(strategy, backend, **kw)
+            self.raw_fn = _build_simulate_fn(strategy, backend, **kw)
             self.raw_step = _build_simulate_step(strategy, backend, **kw)
+            # The tables enter the program as closure constants (hoisted
+            # by jit into device-resident parameters), so per-run args
+            # are only the request inputs; donate the colors buffer.
+            self._fn = jax.jit(partial(self.raw_fn, self._st),
+                               donate_argnums=(0,))
+            self._st_is_arg = False
         self._compiled = None           # AOT executable, built on first run
         self.stats.build_ms = (time.perf_counter() - t0) * 1e3
 
@@ -346,8 +372,14 @@ class ColoringPlan:
         """
         t0 = time.perf_counter()
         c0, g0, active0, seed_ = self.request_inputs(color_mask, colors0, seed)
-        args = (self._st, jnp.asarray(c0), jnp.asarray(g0),
-                jnp.asarray(active0), seed_)
+        # Explicit transfers of the per-request inputs only — the static
+        # tables are closure constants (simulate) or a device-resident
+        # sharded dict (shard_map); warm runs move no table bytes
+        # (pinned by the transfer-guard probe in tests/test_plan.py).
+        args = (jax.device_put(c0), jax.device_put(g0),
+                jax.device_put(active0), jax.device_put(seed_))
+        if self._st_is_arg:
+            args = (self._st,) + args
         if self._compiled is None:
             # Ahead-of-time split: trace+compile cost lands in
             # ``stats.compile_ms`` so serving accounting can book it as

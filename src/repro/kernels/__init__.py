@@ -7,8 +7,28 @@ paper optimizes on GPU, so they get TPU kernels here (DESIGN.md §2):
 * ``vb_bit``      -- windowed forbidden-bitmask color assignment
 * ``conflict``    -- Algorithm-4 conflict detection over ELL tiles
 * ``d2_forbidden``-- net-based two-hop forbidden-mask accumulation
+* ``fused_round`` -- one whole speculate→detect round per ``pallas_call``
 
 Each kernel ships ``<name>.py`` (``pl.pallas_call`` + ``BlockSpec``),
-a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``;
-``interpret=True`` executes the kernel body on CPU for validation.
+a jit'd wrapper in ``ops.py``, and a pure-jnp oracle in ``ref.py``.
+
+Kernel wrappers take ``interpret=None`` and resolve it through
+:func:`default_interpret`: compiled Mosaic kernels on TPU, the Pallas
+interpreter everywhere else (the kernels are TPU-targeted, so CPU and
+GPU installs must never attempt to lower them).
 """
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Platform-derived default for kernel ``interpret`` flags.
+
+    ``False`` (compiled Mosaic) only when the default jax backend is a
+    TPU; ``True`` (Pallas interpret mode) everywhere else.  Evaluated at
+    trace time — the flag is a static argument of every kernel wrapper.
+    """
+    return jax.default_backend() != "tpu"

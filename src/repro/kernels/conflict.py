@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 DEFAULT_TILE = 256
 
 
@@ -83,9 +85,11 @@ def conflict_detect(
     *,
     recolor_degrees: bool = True,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (lose_v (N,) bool, lose_other (N, W) bool, count scalar)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, w = adj_cidx.shape
     n_tab = color_tab.shape[0] - 1  # last slot is pad
     pad = (-n) % tile

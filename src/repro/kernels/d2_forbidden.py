@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 DEFAULT_TILE = 128
 
 
@@ -67,9 +69,11 @@ def d2_forbidden(
     *,
     partial_d2: bool = False,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """uint32 forbidden masks over the current window for each vertex."""
+    if interpret is None:
+        interpret = default_interpret()
     n, w = adj_cidx.shape
     pad = (-n) % tile
     pad_idx = color_tab.shape[0] - 1

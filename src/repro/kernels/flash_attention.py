@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -69,9 +71,11 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Fused GQA attention. Returns (B, Lq, Hq, dh)."""
+    if interpret is None:
+        interpret = default_interpret()
     b, lq, hq, dh = q.shape
     lk, hkv = k.shape[1], k.shape[2]
     g = hq // hkv

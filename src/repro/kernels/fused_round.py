@@ -1,0 +1,309 @@
+"""Fused speculate→detect round megakernel (one ``pallas_call`` per round).
+
+The chained ``pallas`` backend runs one inner round as four separate
+programs — ``vb_bit``/``d2_forbidden`` assignment sweeps, ``pair_scatter``
+for received ghost updates, and ``conflict`` detection — each re-reading
+the full per-shard color table from HBM.  Following the single-pass
+structure of Taş & Kaya's optimistic coloring and KokkosKernels' fused
+GPU kernels (Deveci et al.), this kernel executes the *whole* round in
+one ``pallas_call``:
+
+  1. optional inline scatter of received ``(slot, color)`` pairs into the
+     ghost segment (folds ``pair_scatter`` in — drop convention: slots
+     past the ghost count are padding);
+  2. tiled owned-vs-ghost conflict detection with the Alg-4 loser rule
+     (hash tie-breaking via ``v_loses``), accumulating the local lose
+     mask, the ghost-side lose table, and the conflict count;
+  3. losers are zeroed and speculatively recolored to a fixed point —
+     the windowed forbidden-bitmask assignment plus intra-part collision
+     resolution, iterated with an in-kernel ``lax.while_loop``.
+
+The color table is materialized in VMEM once and every sweep is a tiled
+``fori_loop`` over row blocks (``dynamic_slice`` on row-major operands),
+so HBM sees one read of the table per round instead of four.  The math
+is lifted verbatim from the jnp reference (``core.local._speculate_round``
+and ``core.distributed._detect_part``), which keeps the fused path
+bit-identical to the decomposed one — ``fused_round_ref`` in
+``kernels/ref.py`` is the oracle and ``tests/test_kernels.py -k fused``
+pins parity on d1/d2/pd2 including ragged tails.
+
+VMEM working set: the full per-shard adjacency (and two-hop) blocks plus
+the color/deg/gid tables — same slab-shard ≤1M-vertex budget as
+``vb_bit.py``, with the two-hop block (n×W²) the dominant term for D2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.conflict import v_loses
+from repro.core.local import forbidden_mask, pick_color
+
+DEFAULT_TILE = 256
+
+# Ghost-lose accumulation: below this tile*width*n_ghost product the sweep
+# uses the scatter-free ballot-style iota-match reduction (the TPU idiom —
+# VPU compare+reduce, no serialized scatter); above it (huge D2 two-hop
+# blocks) it falls back to a clamped scatter into the (G+1,) ghost table.
+MATCH_LIMIT = 1 << 28
+
+__all__ = ["fused_round", "DEFAULT_TILE", "MATCH_LIMIT"]
+
+
+def _make_kernel(*, n, g, n_pad, tile, w, h2, problem, recolor_degrees,
+                 max_iters, has_pairs):
+    """Build the kernel body for one (shape, problem) configuration."""
+    needs_l2 = problem in ("d2", "pd2")
+    T = n_pad // tile
+    i32 = jnp.int32
+
+    def kernel(*refs):
+        it = iter(refs)
+        adj_ref = next(it)
+        th_ref = next(it) if needs_l2 else None
+        colors_ref, ghost_ref, deg_ref, gid_ref, bnd_ref = (
+            next(it), next(it), next(it), next(it), next(it))
+        if has_pairs:
+            slots_ref, vals_ref = next(it), next(it)
+        out_colors_ref, out_lose_v_ref, out_lose_g_ref, count_ref = (
+            next(it), next(it), next(it), next(it))
+
+        adj = adj_ref[...]                       # (n_pad, w)
+        colors_in = colors_ref[...]              # (n,)
+        ghost = ghost_ref[...][:g]               # (g,)
+        deg_tab = deg_ref[...]                   # (n+g+1,)
+        gid_tab = gid_ref[...]
+        bnd = bnd_ref[...]                       # (n_pad,) int32 0/1
+        th = th_ref[...] if needs_l2 else None   # (n_pad, h2)
+
+        if has_pairs:
+            # Inline pair_scatter: scatter-as-gather (slots are unique per
+            # exchange; slots >= g are padding and drop).
+            slots = slots_ref[...]
+            vals = vals_ref[...]
+            pos = jax.lax.broadcasted_iota(i32, (g, slots.shape[0]), 0)
+            match = pos == slots[None, :]
+            hit = match.any(axis=1)
+            val = jnp.where(match, vals[None, :], 0).sum(axis=1)
+            ghost = jnp.where(hit, val, ghost)
+
+        padz = jnp.zeros((n_pad - n,), i32)
+        tab = jnp.concatenate([colors_in, ghost, jnp.zeros((1,), i32)])
+        colors_p = jnp.concatenate([colors_in, padz])
+        deg_rows = jnp.concatenate([deg_tab[:n], padz])
+        gid_rows = jnp.concatenate([gid_tab[:n], padz])
+
+        # -- 2. Alg-4 owned-vs-ghost conflict detection (tiled sweeps) ----
+        def sweep(adj_like, wk, carry):
+            use_match = g > 0 and tile * wk * g <= MATCH_LIMIT
+
+            def tbody(t, c):
+                lose_rows, lose_g, cnt = c
+                r0 = t * tile
+                a = jax.lax.dynamic_slice(adj_like, (r0, 0), (tile, wk))
+                cv = jax.lax.dynamic_slice(colors_p, (r0,), (tile,))
+                dv = jax.lax.dynamic_slice(deg_rows, (r0,), (tile,))
+                gv = jax.lax.dynamic_slice(gid_rows, (r0,), (tile,))
+                b = jax.lax.dynamic_slice(bnd, (r0,), (tile,))
+                is_ghost = (a >= n) & (a < n + g)
+                vl = v_loses(cv[:, None], tab[a], dv[:, None], deg_tab[a],
+                             gv[:, None], gid_tab[a],
+                             recolor_degrees=recolor_degrees) & is_ghost
+                ol = v_loses(tab[a], cv[:, None], deg_tab[a], dv[:, None],
+                             gid_tab[a], gv[:, None],
+                             recolor_degrees=recolor_degrees) & is_ghost
+                lr = (vl.any(axis=1) & (b != 0)).astype(i32)
+                prev = jax.lax.dynamic_slice(lose_rows, (r0,), (tile,))
+                lose_rows = jax.lax.dynamic_update_slice(
+                    lose_rows, prev | lr, (r0,))
+                if use_match:
+                    # Ballot-style reduction: ghost slot j lost iff any edge
+                    # of this tile with table index n+j carries ol — a VPU
+                    # compare+any, no scatter (same trick as the pair apply).
+                    gslot = jax.lax.broadcasted_iota(i32, (1, 1, g), 2)
+                    hit = ((a - n)[:, :, None] == gslot) & ol[:, :, None]
+                    lose_g = lose_g | jnp.pad(hit.any(axis=(0, 1)), (0, 1))
+                else:
+                    # Huge blocks (D2 two-hop at slab scale): clamped
+                    # scatter into the (G+1,) ghost table, pad slot last.
+                    idx = jnp.where(is_ghost, a - n, g)
+                    lose_g = lose_g.at[idx.reshape(-1)].max(ol.reshape(-1))
+                return lose_rows, lose_g, cnt + (vl | ol).sum().astype(i32)
+
+            return jax.lax.fori_loop(0, T, tbody, carry)
+
+        carry = (jnp.zeros((n_pad,), i32), jnp.zeros((g + 1,), bool),
+                 i32(0))
+        if problem != "pd2":
+            carry = sweep(adj, w, carry)
+        if needs_l2:
+            carry = sweep(th, h2, carry)
+        lose_rows, lose_ghost, cnt = carry
+
+        # -- 3. zero losers, speculate to a fixed point -------------------
+        active = lose_rows                       # (n_pad,) 0/1; pad rows 0
+        tab = tab.at[:n].set(jnp.where(lose_rows[:n] != 0, 0, colors_in))
+        base0 = jnp.ones((n_pad,), i32)
+
+        def cond(stv):
+            tab, _, it_ = stv
+            return (it_ < max_iters) & jnp.any(
+                (active[:n] != 0) & (tab[:n] == 0))
+
+        def body(stv):
+            tab, base, it_ = stv
+            rows_now = jnp.concatenate([tab[:n], padz])
+
+            # Windowed assignment from the iteration-start snapshot.
+            def abody(t, c):
+                newc, newb = c
+                r0 = t * tile
+                a = jax.lax.dynamic_slice(adj, (r0, 0), (tile, w))
+                cv = jax.lax.dynamic_slice(rows_now, (r0,), (tile,))
+                act = jax.lax.dynamic_slice(active, (r0,), (tile,))
+                b = jax.lax.dynamic_slice(base, (r0,), (tile,))
+                uncolored = (act != 0) & (cv == 0)
+                base_eff = jnp.where(uncolored, b, 1)
+                if needs_l2:
+                    tht = jax.lax.dynamic_slice(th, (r0, 0), (tile, h2))
+                    if problem == "pd2":
+                        allc = tab[tht]
+                    else:
+                        allc = jnp.concatenate([tab[a], tab[tht]], axis=-1)
+                else:
+                    allc = tab[a]
+                m = forbidden_mask(allc, base_eff)
+                cand, ok = pick_color(m, base_eff)
+                nc = jnp.where(uncolored & ok, cand, cv)
+                nb = jnp.where(uncolored & ~ok, b + 32, b)
+                return (jax.lax.dynamic_update_slice(newc, nc, (r0,)),
+                        jax.lax.dynamic_update_slice(newb, nb, (r0,)))
+
+            newc, newb = jax.lax.fori_loop(0, T, abody, (rows_now, base))
+            tab = tab.at[:n].set(newc[:n])
+
+            # Intra-part Alg-4 collision resolution on the updated table.
+            def bbody(t, lose):
+                r0 = t * tile
+                a = jax.lax.dynamic_slice(adj, (r0, 0), (tile, w))
+                nc = jax.lax.dynamic_slice(newc, (r0,), (tile,))
+                act = jax.lax.dynamic_slice(active, (r0,), (tile,))
+                dv = jax.lax.dynamic_slice(deg_rows, (r0,), (tile,))
+                gv = jax.lax.dynamic_slice(gid_rows, (r0,), (tile,))
+                if needs_l2:
+                    tht = jax.lax.dynamic_slice(th, (r0, 0), (tile, h2))
+                    lose2 = v_loses(
+                        nc[:, None], tab[tht], dv[:, None], deg_tab[tht],
+                        gv[:, None], gid_tab[tht],
+                        recolor_degrees=recolor_degrees).any(axis=-1)
+                else:
+                    lose2 = jnp.zeros((tile,), bool)
+                if problem == "pd2":
+                    lose1 = jnp.zeros((tile,), bool)
+                else:
+                    lose1 = v_loses(
+                        nc[:, None], tab[a], dv[:, None], deg_tab[a],
+                        gv[:, None], gid_tab[a],
+                        recolor_degrees=recolor_degrees).any(axis=-1)
+                lz = ((act != 0) & (lose1 | lose2)).astype(i32)
+                return jax.lax.dynamic_update_slice(lose, lz, (r0,))
+
+            lose = jax.lax.fori_loop(0, T, bbody, jnp.zeros((n_pad,), i32))
+            tab = tab.at[:n].set(jnp.where(lose[:n] != 0, 0, newc[:n]))
+            return tab, newb, it_ + 1
+
+        tab, _, _ = jax.lax.while_loop(cond, body, (tab, base0, i32(0)))
+
+        out_colors_ref[...] = tab[:n]
+        out_lose_v_ref[...] = lose_rows[:n]
+        if g:
+            out_lose_g_ref[...] = lose_ghost[:g].astype(i32)
+        else:
+            out_lose_g_ref[...] = jnp.zeros((1,), i32)
+        count_ref[0] = cnt
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "problem", "recolor_degrees", "max_iters", "tile", "interpret"))
+def fused_round(
+    adj_cidx: jnp.ndarray,        # (N, W) int32 color-table indices
+    colors: jnp.ndarray,          # (N,)   int32 current local colors
+    ghost: jnp.ndarray,           # (G,)   int32 ghost colors (post-exchange)
+    deg_tab: jnp.ndarray,         # (N+G+1,) int32 degrees (pad slot last)
+    gid_tab: jnp.ndarray,         # (N+G+1,) int32 global ids
+    is_boundary: jnp.ndarray,     # (N,)   bool
+    two_hop_cidx: jnp.ndarray | None = None,   # (N, H2) for d2/pd2
+    pair_slots: jnp.ndarray | None = None,     # (C,) optional ghost updates
+    pair_colors: jnp.ndarray | None = None,    # (C,)
+    *,
+    problem: str = "d1",
+    recolor_degrees: bool = True,
+    max_iters: int | None = None,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+):
+    """One fused inner round: detect → zero losers → speculative recolor.
+
+    Returns ``(new_colors (N,), lose_v (N,) bool, lose_ghost (G,) bool,
+    n_conflicts scalar int32)`` — exactly the decomposed
+    ``_detect_part`` + ``_recolor_part`` composition of the reference
+    backend (``fused_round_ref`` is the pinned oracle).
+    """
+    from repro.kernels import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    if max_iters is None:
+        max_iters = 512 if problem == "d1" else 1024
+    if problem not in ("d1", "d2", "pd2"):
+        raise ValueError(f"fused_round does not support problem={problem!r}")
+    n, w = adj_cidx.shape
+    g = ghost.shape[0]
+    pad_cidx = n + g
+    pad = (-n) % tile
+    n_pad = n + pad
+
+    def pad_rows(x, value=0):
+        if not pad:
+            return x
+        cfg = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, cfg, constant_values=value)
+
+    adj_p = pad_rows(adj_cidx.astype(jnp.int32), pad_cidx)
+    bnd_p = pad_rows(is_boundary.astype(jnp.int32))
+    inputs = [adj_p]
+    h2 = 0
+    if problem in ("d2", "pd2"):
+        if two_hop_cidx is None:
+            raise ValueError(f"problem={problem!r} requires two_hop_cidx")
+        h2 = two_hop_cidx.shape[1]
+        inputs.append(pad_rows(two_hop_cidx.astype(jnp.int32), pad_cidx))
+    ghost_in = ghost.astype(jnp.int32) if g else jnp.zeros((1,), jnp.int32)
+    inputs += [colors.astype(jnp.int32), ghost_in,
+               deg_tab.astype(jnp.int32), gid_tab.astype(jnp.int32), bnd_p]
+    has_pairs = pair_slots is not None
+    if has_pairs:
+        inputs += [pair_slots.astype(jnp.int32),
+                   pair_colors.astype(jnp.int32)]
+
+    kernel = _make_kernel(
+        n=n, g=g, n_pad=n_pad, tile=tile, w=w, h2=h2, problem=problem,
+        recolor_degrees=recolor_degrees, max_iters=max_iters,
+        has_pairs=has_pairs)
+    new_colors, lose_v, lose_g, count = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((max(g, 1),), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return (new_colors, lose_v.astype(bool), lose_g[:g].astype(bool),
+            count[0])

@@ -8,8 +8,9 @@ selects them through the pluggable backend layer —
 ``color_distributed(..., backend="pallas")`` routes every local-coloring
 and conflict-detection step through these wrappers (see
 ``repro.core.backend.PallasBackend``); ``backend="reference"`` keeps the
-pure-``jnp`` path.  Interpret mode executes the kernel bodies on CPU;
-on TPU they compile to Mosaic.
+pure-``jnp`` path.  Every wrapper's ``interpret`` flag defaults to
+:func:`repro.kernels.default_interpret` — interpret mode (kernel bodies
+as plain jax) off-TPU, Mosaic compilation on TPU.
 """
 from __future__ import annotations
 
@@ -20,9 +21,11 @@ import jax.numpy as jnp
 
 from repro.core.conflict import v_loses
 from repro.core.local import pick_color
+from repro.kernels import default_interpret
 from repro.kernels.conflict import conflict_detect
 from repro.kernels.d2_forbidden import d2_forbidden
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_round import fused_round
 from repro.kernels.scatter import pair_scatter
 from repro.kernels.vb_bit import vb_bit_assign
 
@@ -31,6 +34,7 @@ __all__ = [
     "conflict_detect",
     "d2_forbidden",
     "flash_attention",
+    "fused_round",
     "pair_scatter",
     "local_color_d1_pallas",
     "local_color_d2_pallas",
@@ -44,9 +48,11 @@ __all__ = [
 def local_color_d1_pallas(
     adj_cidx, color_tab, active, deg_tab, gid_tab, *,
     recolor_degrees: bool = True, max_iters: int = 512,
-    interpret: bool = True, tile: int = 256,
+    interpret: bool | None = None, tile: int = 256,
 ):
     """Kernel-backed distance-1 local coloring (same contract as core.local)."""
+    if interpret is None:
+        interpret = default_interpret()
     n_loc = active.shape[0]
     base0 = jnp.ones((n_loc,), jnp.int32) + 0 * color_tab[:n_loc]
     deg_loc = deg_tab[:n_loc]
@@ -84,9 +90,11 @@ def local_color_d1_pallas(
 )
 def d2_assign_pallas(
     adj_cidx, ext_adj_cidx, color_tab, base, active, *,
-    partial_d2: bool = False, interpret: bool = True, tile: int = 128,
+    partial_d2: bool = False, interpret: bool | None = None, tile: int = 128,
 ):
     """One D2 assignment step: two-hop forbidden kernel + lowest-bit pick."""
+    if interpret is None:
+        interpret = default_interpret()
     n_loc = active.shape[0]
     colors = color_tab[:n_loc]
     forbidden = d2_forbidden(
@@ -108,7 +116,7 @@ def d2_assign_pallas(
 def local_color_d2_pallas(
     adj_cidx, two_hop_cidx, ext_adj_cidx, color_tab, active, deg_tab, gid_tab, *,
     partial_d2: bool = False, recolor_degrees: bool = True, max_iters: int = 1024,
-    interpret: bool = True, tile: int = 128,
+    interpret: bool | None = None, tile: int = 128,
 ):
     """Kernel-backed distance-2 local coloring (same contract as core.local).
 
@@ -117,6 +125,8 @@ def local_color_d2_pallas(
     one-hop (unless ``partial_d2``) and two-hop neighborhoods, so the fixed
     point matches ``repro.core.local.local_color_d2`` exactly.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n_loc = active.shape[0]
     base0 = jnp.ones((n_loc,), jnp.int32) + 0 * color_tab[:n_loc]
     deg_loc = deg_tab[:n_loc]

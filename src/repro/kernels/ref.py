@@ -71,6 +71,34 @@ def pair_scatter_ref(table, slots, values):
         values.astype(jnp.int32), mode="drop")
 
 
+def fused_round_ref(adj_cidx, colors, ghost, deg_tab, gid_tab, is_boundary,
+                    two_hop_cidx=None, pair_slots=None, pair_colors=None,
+                    ext_adj_cidx=None, *, problem="d1", recolor_degrees=True):
+    """Oracle for kernels.fused_round.fused_round.
+
+    The decomposed composition the megakernel fuses: optional
+    ``pair_scatter`` into the ghost segment, then the reference
+    ``_detect_part`` sweep, then zero-losers + ``_recolor_part``.
+    ``ext_adj_cidx`` is only threaded through for the d2 recolor
+    signature (the reference backend ignores it).
+    """
+    from repro.core.distributed import _detect_part, _recolor_part
+
+    if pair_slots is not None:
+        ghost = pair_scatter_ref(ghost, pair_slots, pair_colors)
+    st = {"adj_cidx": adj_cidx, "deg_tab": deg_tab, "gid_tab": gid_tab,
+          "is_boundary": is_boundary}
+    if two_hop_cidx is not None:
+        st["two_hop_cidx"] = two_hop_cidx
+        st["ext_adj_cidx"] = (ext_adj_cidx if ext_adj_cidx is not None
+                              else adj_cidx)
+    kw = dict(problem=problem, recolor_degrees=recolor_degrees)
+    lose_l, lose_g, conf = _detect_part(st, colors, ghost, **kw)
+    new_colors = _recolor_part(st, jnp.where(lose_l, 0, colors), ghost,
+                               lose_l, lose_g, **kw)
+    return new_colors, lose_l, lose_g, conf
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Oracle for kernels.flash_attention (dense fp32 attention)."""
     from repro.models.layers import _gqa_out, _gqa_scores, _mask_bias

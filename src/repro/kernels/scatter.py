@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 DEFAULT_TILE = 256
 
 
@@ -41,7 +43,7 @@ def pair_scatter(
     values: jnp.ndarray,      # (C,) int32 paired values
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Return ``table`` with ``table[slots[j]] = values[j]`` applied.
 
@@ -50,6 +52,8 @@ def pair_scatter(
     ids must be unique.  Bit-exact against the jnp reference
     ``repro.kernels.ref.pair_scatter_ref``.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = table.shape[0]
     c = slots.shape[0]
     pad = (-n) % tile

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 DEFAULT_TILE = 256
 
 
@@ -64,9 +66,11 @@ def vb_bit_assign(
     color_tab: jnp.ndarray,   # (n_tab,) int32 colors of everything referenceable
     *,
     tile: int = DEFAULT_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pallas ``VB_BIT`` assignment step. Returns (new_colors, new_base)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, w = adj_cidx.shape
     pad = (-n) % tile
     if pad:

@@ -7,8 +7,9 @@
 Graph specs: hex:NX,NY,NZ | grid:NX,NY | rmat:SCALE,EF | rgg:N,R |
 myc:K | er:N,DEG | bip:ROWS,COLS,NNZ
 
---backend selects the local-compute backend (reference jnp path or the
-Pallas kernels); --exchange the ghost-exchange strategy, where ``delta``
+--backend selects the local-compute backend (reference jnp path, the
+chained Pallas kernels, or ``pallas_fused`` — one megakernel per inner
+round); --exchange the ghost-exchange strategy, where ``delta``
 ships only boundary colors that changed since the previous round and
 ``sparse_delta`` routes them as count-prefixed (slot, color) pairs over
 edge-colored ppermute phases — for both, the reported comm/round is the
@@ -128,7 +129,7 @@ def main() -> None:
     ap.add_argument("--strategy", default="block",
                     choices=["block", "edge_balanced", "random"])
     ap.add_argument("--backend", default="reference",
-                    choices=["reference", "pallas"])
+                    choices=["reference", "pallas", "pallas_fused"])
     ap.add_argument("--exchange", default="all_gather",
                     choices=["all_gather", "halo", "delta", "sparse_delta"])
     ap.add_argument("--engine", default="auto",

@@ -177,10 +177,10 @@ class _SlotGroup:
                 return []
             self._start_wave(stats, count=count)
         self._fill_slots(stats, count=count)
-        step = self._program(self._steps, self._make_step, (1,), stats,
-                             self.plan._st, self.carry)
+        step = self._program(self._steps, self._make_step, (0,), stats,
+                             self.carry)
         t0 = time.perf_counter()
-        self.carry, done = step(self.plan._st, self.carry)
+        self.carry, done = step(self.carry)
         done = np.asarray(done)
         stats.warm_ms_total += (time.perf_counter() - t0) * 1e3
         finished = []
@@ -292,8 +292,9 @@ class _SlotGroup:
     def _make_step(self):
         raw = self.plan.raw_step
         mr = self.plan.key.max_rounds
+        st = self.plan._st      # closure constant: uploaded once, not per call
 
-        def step(st, carry):
+        def step(carry):
             new = jax.vmap(raw, in_axes=(None, 0))(st, carry)
             live = (carry["conf"] > 0) & (carry["rounds"] < mr)
 

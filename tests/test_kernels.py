@@ -165,17 +165,121 @@ def test_pallas_local_color_d2_matches_core():
 
 
 # ---------------------------------------------------------------------------
+# Fused round megakernel: parity with the decomposed oracle composition.
+# ---------------------------------------------------------------------------
+
+def _part0_state(problem, seed=3, parts=3):
+    """Part-0 device arrays of a real partitioned graph + random colors."""
+    from repro.core.distributed import build_device_state
+    from repro.graph.generators import bipartite_random, rmat
+    from repro.graph.partition import partition_graph
+
+    if problem == "pd2":
+        g = bipartite_random(70, 35, 3, seed=seed)
+    else:
+        g = rmat(7, 5, seed=seed)
+    pg = partition_graph(g, parts, strategy="edge_balanced",
+                         second_layer=problem != "d1")
+    st_ = build_device_state(pg, problem)
+    rng = np.random.default_rng(seed + 1)
+    nl, gh = pg.n_local, pg.n_ghost
+    out = {k: jnp.asarray(v[0]) for k, v in st_.items()}
+    out["colors"] = jnp.asarray(rng.integers(0, 7, nl).astype(np.int32))
+    out["ghost"] = jnp.asarray(rng.integers(0, 7, gh).astype(np.int32))
+    out["n_ghost"] = gh
+    return out
+
+
+def _fused_vs_ref(s, problem, tile, pair_slots=None, pair_colors=None):
+    th = s.get("two_hop_cidx")
+    got = ops.fused_round(
+        s["adj_cidx"], s["colors"], s["ghost"], s["deg_tab"], s["gid_tab"],
+        s["is_boundary"], two_hop_cidx=th, pair_slots=pair_slots,
+        pair_colors=pair_colors, problem=problem, tile=tile)
+    want = ref.fused_round_ref(
+        s["adj_cidx"], s["colors"], s["ghost"], s["deg_tab"], s["gid_tab"],
+        s["is_boundary"], two_hop_cidx=th, pair_slots=pair_slots,
+        pair_colors=pair_colors, ext_adj_cidx=s.get("ext_adj_cidx"),
+        problem=problem)
+    for g_, w_, name in zip(got, want, ("colors", "lose_l", "lose_g", "conf")):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_),
+                                      err_msg=f"{problem}/{name}")
+
+
+@pytest.mark.parametrize("problem", ["d1", "d2", "pd2"])
+@pytest.mark.parametrize("tile", [32, 64, 256])
+def test_fused_round_parity(problem, tile):
+    """Megakernel == decomposed oracle, incl. ragged tails (nl % tile != 0)."""
+    _fused_vs_ref(_part0_state(problem), problem, tile)
+
+
+@pytest.mark.parametrize("problem", ["d1", "d2"])
+def test_fused_round_pairs_d1_d2(problem):
+    """Inline pair scatter: (slot, color) updates land before detection."""
+    s = _part0_state(problem, seed=5)
+    rng = np.random.default_rng(11)
+    gh = s["n_ghost"]
+    c = max(gh // 2, 1)
+    slots = np.full(c, gh, np.int32)              # pad sentinel drops
+    k = c // 2
+    slots[:k] = rng.permutation(gh)[:k]
+    vals = rng.integers(1, 7, c).astype(np.int32)
+    _fused_vs_ref(s, problem, 64, pair_slots=jnp.asarray(slots),
+                  pair_colors=jnp.asarray(vals))
+
+
+def test_fused_round_zero_ghost_d1():
+    """Single part: G == 0 exercises the dummy-ghost input path."""
+    _fused_vs_ref(_part0_state("d1", parts=1), "d1", 64)
+
+
+def test_fused_round_rejects_d1_2gl():
+    s = _part0_state("d1")
+    with pytest.raises(ValueError, match="d1_2gl"):
+        ops.fused_round(s["adj_cidx"], s["colors"], s["ghost"],
+                        s["deg_tab"], s["gid_tab"], s["is_boundary"],
+                        problem="d1_2gl")
+
+
+@given(seed=st.integers(0, 10_000), parts=st.integers(1, 4))
+@settings(max_examples=8, deadline=None)
+def test_fused_backend_round_property_d1(seed, parts):
+    """Property: PallasFusedBackend.round == the reference decomposed round
+    on random partitioned graphs (random topology, partition count, colors)."""
+    from repro.core.backend import PallasFusedBackend, ReferenceBackend
+    from repro.core.distributed import build_device_state
+    from repro.graph.generators import erdos_renyi
+    from repro.graph.partition import partition_graph
+
+    rng = np.random.default_rng(seed)
+    g = erdos_renyi(int(rng.integers(20, 90)), int(rng.integers(1, 5)),
+                    seed=seed)
+    pg = partition_graph(g, parts)
+    st_ = build_device_state(pg, "d1")
+    s = {k: jnp.asarray(v[0]) for k, v in st_.items()}
+    colors = jnp.asarray(rng.integers(0, 6, pg.n_local).astype(np.int32))
+    ghost = jnp.asarray(rng.integers(0, 6, pg.n_ghost).astype(np.int32))
+    kw = dict(problem="d1", recolor_degrees=True)
+    got = PallasFusedBackend(interpret=True).round(s, colors, ghost, **kw)
+    want = ReferenceBackend().round(s, colors, ghost, **kw)
+    for g_, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+# ---------------------------------------------------------------------------
 # Backend layer: reference and pallas must be interchangeable — identical
 # colorings AND identical round counts through the full distributed loop.
 # ---------------------------------------------------------------------------
 
 def test_backend_registry():
     from repro.core.backend import (
-        BACKENDS, PallasBackend, ReferenceBackend, get_backend)
+        BACKENDS, PallasBackend, PallasFusedBackend, ReferenceBackend,
+        get_backend)
 
-    assert set(BACKENDS) >= {"reference", "pallas"}
+    assert set(BACKENDS) >= {"reference", "pallas", "pallas_fused"}
     assert isinstance(get_backend("reference"), ReferenceBackend)
     assert isinstance(get_backend("pallas"), PallasBackend)
+    assert isinstance(get_backend("pallas_fused"), PallasFusedBackend)
     assert get_backend(None).name == "reference"
     inst = PallasBackend(interpret=True)
     assert get_backend(inst) is inst
@@ -207,6 +311,34 @@ def test_backend_parity_distributed(problem):
     assert (ref.colors == pal.colors).all(), problem
     assert ref.rounds == pal.rounds, problem
     assert ref.backend == "reference" and pal.backend == "pallas"
+
+
+@pytest.mark.parametrize("problem", ["d1", "d1_2gl", "d2", "pd2"])
+def test_fused_backend_parity_distributed(problem):
+    """pallas_fused through the full loop: identical colors, round counts,
+    conflict totals, AND per-round comm-bytes accounting vs reference.
+    (``d1_2gl`` exercises the decomposed-round fallback.)"""
+    from repro.core.distributed import color_distributed
+    from repro.graph.generators import bipartite_random, rmat
+    from repro.graph.partition import partition_graph
+
+    if problem == "pd2":
+        g = bipartite_random(90, 45, 3, seed=5)
+    else:
+        g = rmat(7, 5, seed=3)
+    pg = partition_graph(g, 3, strategy="edge_balanced",
+                         second_layer=problem != "d1")
+    ref_ = color_distributed(pg, problem=problem, engine="simulate",
+                             backend="reference")
+    fus = color_distributed(pg, problem=problem, engine="simulate",
+                            backend="pallas_fused")
+    assert ref_.converged and fus.converged
+    assert (ref_.colors == fus.colors).all(), problem
+    assert ref_.rounds == fus.rounds, problem
+    assert ref_.total_conflicts == fus.total_conflicts, problem
+    np.testing.assert_array_equal(ref_.comm_bytes_by_round,
+                                  fus.comm_bytes_by_round)
+    assert fus.backend == "pallas_fused"
 
 
 def test_backend_parity_single_device():

@@ -68,7 +68,7 @@ from repro.core.validate import is_proper_d1, is_proper_d2
 g = hex_mesh(24, 8, 8)
 pg = partition_graph(g, 8, second_layer=True)   # block slabs -> halo-legal
 ref = color_distributed(pg, problem="d1", engine="simulate")
-for backend in ("reference", "pallas"):
+for backend in ("reference", "pallas", "pallas_fused"):
     for exchange in ("all_gather", "halo", "delta", "sparse_delta"):
         res = color_distributed(pg, problem="d1", engine="shard_map",
                                 backend=backend, exchange=exchange)
@@ -95,15 +95,17 @@ assert (sd.colors == ref.colors).all() and sd.rounds == ref.rounds
 assert sd.comm_bytes_total < ag.comm_bytes_total
 assert list(sd.comm_bytes_by_round) == list(sd_sim.comm_bytes_by_round)
 
-# Pallas backend round-trips d2/pd2 through shard_map + sparse a2a too.
+# Pallas backends round-trip d2/pd2 through shard_map + sparse a2a too
+# (chained kernels AND the fused round megakernel).
 for problem in ("d2", "pd2"):
     p_ref = color_distributed(pg, problem=problem, engine="simulate")
-    p_pal = color_distributed(pg, problem=problem, engine="shard_map",
-                              backend="pallas", exchange="sparse_delta")
-    assert (p_ref.colors == p_pal.colors).all(), problem
-    assert p_ref.rounds == p_pal.rounds, problem
-    if problem == "d2":
-        assert is_proper_d2(g, p_pal.colors)
+    for backend in ("pallas", "pallas_fused"):
+        p_pal = color_distributed(pg, problem=problem, engine="shard_map",
+                                  backend=backend, exchange="sparse_delta")
+        assert (p_ref.colors == p_pal.colors).all(), (problem, backend)
+        assert p_ref.rounds == p_pal.rounds, (problem, backend)
+        if problem == "d2":
+            assert is_proper_d2(g, p_pal.colors)
 print("OK")
 """)
     assert "OK" in out

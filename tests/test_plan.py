@@ -187,6 +187,8 @@ _CACHE = PlanCache(maxsize=64)
     ("reference", "sparse_delta"),
     ("pallas", "all_gather"),
     ("pallas", "sparse_delta"),
+    ("pallas_fused", "all_gather"),
+    ("pallas_fused", "sparse_delta"),
 ])
 def test_plan_run_matches_cold_color_distributed(problem, backend, exchange):
     if exchange == "halo" and not PG.halo_neighbors_ok():
@@ -232,6 +234,39 @@ def test_warm_run_no_host_rebuild_no_retrace(monkeypatch):
     assert (second.colors == first.colors).all()
     assert (seeded.colors == first.colors).all()      # deterministic runtime
     assert set(np.nonzero(masked.colors)[0]) <= set(np.nonzero(mask)[0])
+
+
+def test_warm_run_no_retrace_pallas_fused(monkeypatch):
+    """The megakernel backend honours the same compile-once contract:
+    warm ``plan.run()`` never rebuilds host state or retraces."""
+    plan = build_plan(PG, problem="d2", backend="pallas_fused",
+                      engine="simulate")
+    first = plan.run()
+    traces_after_first = plan.stats.traces
+
+    def _forbidden(*a, **kw):
+        raise AssertionError("warm pallas_fused plan.run() rebuilt host state")
+
+    monkeypatch.setattr(plan_mod, "build_device_state", _forbidden)
+    monkeypatch.setattr(plan._strategy, "prepare", _forbidden)
+    second = plan.run()
+    assert plan.stats.traces == traces_after_first    # zero retraces
+    assert (second.colors == first.colors).all()
+
+
+def test_warm_run_no_implicit_host_transfers():
+    """Static shard tables are device-resident (donated/closure constants):
+    a warm run performs only the *explicit* per-request device_puts, so it
+    survives ``transfer_guard_host_to_device("disallow")`` (which rejects
+    implicit host->device transfers)."""
+    import jax
+
+    plan = build_plan(PG, problem="d1", exchange="sparse_delta",
+                      engine="simulate")
+    first = plan.run()                                # pays trace + transfers
+    with jax.transfer_guard_host_to_device("disallow"):
+        warm = plan.run()
+    assert (warm.colors == first.colors).all()
 
 
 def test_color_mask_and_colors0_through_plan():
