@@ -10,8 +10,12 @@ Each row replays one stream twice: the **cold** pass pays every
 topology's host state build + program compiles, the **warm** replay runs
 entirely through compiled programs.  ``derived`` reports sustained
 requests/sec for both, the compile/execution split, and the refill
-count.  Three acceptance checks run on every invocation (CI runs the toy
-variant as suite ``serve_stream_smoke``):
+count.  :func:`run_mesh` is the ISSUE-7 variant: the same streams on the
+``shard_map`` engine over a 4-device mesh, batched through the
+persistent slot step program (CI's multidevice job runs the toy variant
+as suite ``serve_stream_mesh_smoke``).  Three acceptance checks run on
+every invocation (CI runs the toy variant as suite
+``serve_stream_smoke``):
 
 * every streamed result is bit-identical to its solo ``plan.run``
   equivalent — including the ``reduce_passes > 0`` stream, checked
@@ -31,31 +35,33 @@ from repro.core.plan import PlanCache, get_plan
 from repro.core.reduce import reduce_colors
 from repro.graph.generators import grid_2d, hex_mesh, mycielskian
 from repro.graph.partition import partition_graph
-from repro.serve import ColoringFrontend
+from repro.serve import ColoringFrontend, ColoringRequest
 
 import numpy as np
 
 
 def _solo_oracle(pg, req, cfg, reduce_passes, oracle_cache):
     plan = get_plan(pg, cache=oracle_cache, **cfg)
-    base = plan.run(**req)
+    base = plan.run(**req.plan_inputs())
     if reduce_passes <= 0:
         return base
     red = reduce_colors(plan, base, passes=reduce_passes, cache=oracle_cache,
-                        color_mask=req.get("color_mask"))
+                        color_mask=req.color_mask)
     return red.merged_result(base)
 
 
 def _stream_row(name: str, pgs, *, requests: int, reduce_passes: int = 0,
-                max_batch: int = 4, **cfg) -> tuple[str, float]:
-    fe = ColoringFrontend(cache=PlanCache(), engine="simulate",
+                max_batch: int = 4, engine: str = "simulate",
+                **cfg) -> tuple[str, float]:
+    fe = ColoringFrontend(cache=PlanCache(), engine=engine,
                           max_batch=max_batch, reduce_passes=reduce_passes,
                           **cfg)
+    cfg = {**cfg, "engine": engine}
     pairs = []
     for i in range(requests):
         pg = pgs[i % len(pgs)]
-        req = ({} if i % 3 != 2
-               else {"color_mask": np.arange(pg.n_global) % 2 == 0})
+        req = (ColoringRequest() if i % 3 != 2 else
+               ColoringRequest(color_mask=np.arange(pg.n_global) % 2 == 0))
         pairs.append((pg, req))
 
     t0 = time.perf_counter()
@@ -99,11 +105,11 @@ def _stream_row(name: str, pgs, *, requests: int, reduce_passes: int = 0,
 
     colors = ";".join(
         f"t{i}_colors="
-        f"{_solo_oracle(pg, {}, cfg, reduce_passes, oracle_cache).n_colors}"
+        f"{_solo_oracle(pg, ColoringRequest(), cfg, reduce_passes, oracle_cache).n_colors}"
         for i, pg in enumerate(pgs))
     s = fe.stats
     derived = (
-        f"topologies={len(pgs)};requests={requests};"
+        f"engine={engine};topologies={len(pgs)};requests={requests};"
         f"req_s_cold={requests / cold_s:.1f};"
         f"req_s_warm={requests / warm_s:.1f};"
         f"warm_speedup={cold_s / warm_s:.1f};"
@@ -139,3 +145,34 @@ def run(toy: bool = False) -> list[str]:
                     requests=t // 3 * 2, reduce_passes=2, problem="d1"),
     ]
     return rows
+
+
+def run_mesh(toy: bool = False) -> list[str]:
+    """The ISSUE-7 headline: sustained req/s through the *mesh* slot
+    engine — the persistent ``shard_map`` step program on a 4-device
+    mesh, requests vmapped across slots outside the device axis, slots
+    harvested/refilled from the host between supersteps.  Needs >= 4
+    devices (CI forces 4 host-platform devices); otherwise prints a note
+    and contributes no rows so full local runs still complete."""
+    import jax
+
+    if len(jax.devices()) < 4:
+        print("# serve_stream_mesh skipped: needs >= 4 devices "
+              f"(have {len(jax.devices())}); run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+        return []
+    if toy:
+        graphs = [hex_mesh(8, 6, 6, name="hex_toy"), grid_2d(16, 16)]
+    else:
+        graphs = [hex_mesh(16, 12, 12, name="hex_mesh"), grid_2d(48, 48)]
+    pgs = [partition_graph(g, 4, strategy="block", second_layer=True)
+           for g in graphs]
+    t = 12 if toy else 24
+    return [
+        _stream_row("serve_stream_mesh/mixed2/p4/d1/all_gather", pgs,
+                    requests=t, max_batch=2, engine="shard_map",
+                    problem="d1"),
+        _stream_row("serve_stream_mesh/mixed2/p4/d1/sparse_delta", pgs,
+                    requests=t, max_batch=2, engine="shard_map",
+                    problem="d1", exchange="sparse_delta"),
+    ]

@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a
-recolor quality serve_stream exchange_smoke kernels_smoke recolor_smoke
-quality_smoke serve_stream_smoke]``.
+recolor quality serve_stream serve_stream_mesh exchange_smoke
+kernels_smoke recolor_smoke quality_smoke serve_stream_smoke
+serve_stream_mesh_smoke]``.
 ``--json PATH`` additionally writes the rows as a JSON list of
 ``{name, us_per_call, derived}`` records — CI's bench-smoke job runs
 ``exchange_smoke`` (the fig3 exchange sweep at toy sizes) and uploads
@@ -14,6 +15,9 @@ uploads the cold-vs-warm latency artifact; the quality-smoke job runs
 the colors-vs-passes artifact; the serve-stream-smoke job runs
 ``serve_stream_smoke`` (mixed-topology streams through the
 continuous-batching frontend) and uploads the requests/sec artifact;
+the multidevice job's serve-stream leg runs ``serve_stream_mesh_smoke``
+(the same streams batched through the persistent shard_map slot program
+on a forced 4-device mesh) and uploads the sustained-req/s artifact;
 the kernel-parity job runs ``kernels_smoke`` (the kernel microbench at
 toy sizes, including the fused-round roofline comparison) and uploads
 the HLO-bytes-per-round artifact.
@@ -51,11 +55,13 @@ SUITES = {
     "recolor": lambda: bench_recolor_timesteps.run(),
     "quality": lambda: bench_reduce.run(),
     "serve_stream": lambda: bench_serve_stream.run(),
+    "serve_stream_mesh": lambda: bench_serve_stream.run_mesh(),
     "exchange_smoke": lambda: bench_d1_scaling.run_exchange(toy=True),
     "kernels_smoke": lambda: bench_kernels.run(toy=True),
     "recolor_smoke": lambda: bench_recolor_timesteps.run(toy=True),
     "quality_smoke": lambda: bench_reduce.run(toy=True),
     "serve_stream_smoke": lambda: bench_serve_stream.run(toy=True),
+    "serve_stream_mesh_smoke": lambda: bench_serve_stream.run_mesh(toy=True),
 }
 
 

@@ -29,6 +29,7 @@ from repro.core.backend import (
     PallasBackend,
     ReferenceBackend,
     get_backend,
+    list_backends,
     register_backend,
 )
 from repro.core.exchange import (
@@ -38,6 +39,7 @@ from repro.core.exchange import (
     ExchangeStrategy,
     HaloExchange,
     get_exchange,
+    list_exchanges,
     register_exchange,
 )
 from repro.core.distributed import ColoringResult, color_distributed, color_single_device
@@ -61,10 +63,12 @@ from repro.core.reduce import (
     ReductionResult,
     get_order,
     get_reduce_plan,
+    list_orders,
     reduce_colors,
     reduce_colors_batch,
     register_order,
 )
+from repro.core.registry import Registry
 
 __all__ = [
     "greedy_d1",
@@ -91,6 +95,7 @@ __all__ = [
     "PallasBackend",
     "BACKENDS",
     "get_backend",
+    "list_backends",
     "register_backend",
     "ExchangeStrategy",
     "AllGatherExchange",
@@ -98,6 +103,7 @@ __all__ = [
     "DeltaExchange",
     "EXCHANGES",
     "get_exchange",
+    "list_exchanges",
     "register_exchange",
     "color_histogram",
     "is_balanced",
@@ -109,7 +115,9 @@ __all__ = [
     "ReductionResult",
     "get_order",
     "get_reduce_plan",
+    "list_orders",
     "reduce_colors",
     "reduce_colors_batch",
     "register_order",
+    "Registry",
 ]

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.conflict import v_loses
 from repro.core.local import local_color_d1, local_color_d2
+from repro.core.registry import Registry
 
 __all__ = [
     "LocalBackend",
@@ -32,6 +33,7 @@ __all__ = [
     "PallasFusedBackend",
     "BACKENDS",
     "get_backend",
+    "list_backends",
     "register_backend",
 ]
 
@@ -222,27 +224,29 @@ class PallasFusedBackend(PallasBackend):
         )
 
 
-BACKENDS: dict[str, type[LocalBackend]] = {
-    "reference": ReferenceBackend,
-    "pallas": PallasBackend,
-    "pallas_fused": PallasFusedBackend,
-}
+BACKENDS: Registry = Registry(
+    "backend",
+    {
+        "reference": ReferenceBackend,
+        "pallas": PallasBackend,
+        "pallas_fused": PallasFusedBackend,
+    },
+    instance_of=LocalBackend,
+    instantiate=True,
+    default="reference",
+)
 
 
 def register_backend(name: str, cls: type[LocalBackend]) -> None:
     """Register a third-party :class:`LocalBackend` under ``name``."""
-    BACKENDS[name] = cls
+    BACKENDS.register(name, cls)
+
+
+def list_backends() -> list[str]:
+    """Sorted registered backend names (drives the CLI choices)."""
+    return BACKENDS.names()
 
 
 def get_backend(backend: str | LocalBackend | None) -> LocalBackend:
     """Resolve ``backend`` (name, instance, or None → reference)."""
-    if backend is None:
-        return ReferenceBackend()
-    if isinstance(backend, LocalBackend):
-        return backend
-    try:
-        return BACKENDS[backend]()
-    except KeyError:
-        raise ValueError(
-            f"unknown backend {backend!r}; registered: {sorted(BACKENDS)}"
-        ) from None
+    return BACKENDS.resolve(backend)

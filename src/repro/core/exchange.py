@@ -44,6 +44,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.registry import Registry
+
 __all__ = [
     "ExchangeStrategy",
     "AllGatherExchange",
@@ -52,6 +54,7 @@ __all__ = [
     "SparseDeltaExchange",
     "EXCHANGES",
     "get_exchange",
+    "list_exchanges",
     "register_exchange",
     "send_buffer",
     "payload_bytes",
@@ -369,28 +372,30 @@ class SparseDeltaExchange(ExchangeStrategy):
         return ghost, nbytes, {"prev_send": send, "ghost_tab": ghost_tab}
 
 
-EXCHANGES: dict[str, type[ExchangeStrategy]] = {
-    "all_gather": AllGatherExchange,
-    "halo": HaloExchange,
-    "delta": DeltaExchange,
-    "sparse_delta": SparseDeltaExchange,
-}
+EXCHANGES: Registry = Registry(
+    "exchange",
+    {
+        "all_gather": AllGatherExchange,
+        "halo": HaloExchange,
+        "delta": DeltaExchange,
+        "sparse_delta": SparseDeltaExchange,
+    },
+    instance_of=ExchangeStrategy,
+    instantiate=True,
+    default="all_gather",
+)
 
 
 def register_exchange(name: str, cls: type[ExchangeStrategy]) -> None:
     """Register a third-party :class:`ExchangeStrategy` under ``name``."""
-    EXCHANGES[name] = cls
+    EXCHANGES.register(name, cls)
+
+
+def list_exchanges() -> list[str]:
+    """Sorted registered exchange names (drives the CLI choices)."""
+    return EXCHANGES.names()
 
 
 def get_exchange(exchange: str | ExchangeStrategy | None) -> ExchangeStrategy:
     """Resolve ``exchange`` (name, instance, or None → all_gather)."""
-    if exchange is None:
-        return AllGatherExchange()
-    if isinstance(exchange, ExchangeStrategy):
-        return exchange
-    try:
-        return EXCHANGES[exchange]()
-    except KeyError:
-        raise ValueError(
-            f"unknown exchange {exchange!r}; registered: {sorted(EXCHANGES)}"
-        ) from None
+    return EXCHANGES.resolve(exchange)

@@ -201,6 +201,91 @@ def _build_simulate_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
     return step
 
 
+def _build_shard_map_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
+                          problem: str, recolor_degrees: bool,
+                          max_rounds: int, n_parts: int, stats: PlanStats):
+    """One slot-engine transition of the batched carry on a real mesh.
+
+    The mesh-native counterpart of :func:`_build_simulate_step`: the
+    returned ``device_step(st, carry)`` is meant to run under
+    ``shard_map`` over the part axis ``"p"`` with the *request* axis
+    vmapped **inside** the mapped program — the slot scheduler lives on
+    the host, while every exchange stays a real ``lax`` collective
+    (``all_gather`` / ``ppermute`` / ``psum``) batched over the request
+    axis.  The carry layout is identical to the simulate slot engine
+    (part axis stacked per request; exchange state follows — a stack of
+    per-device states has the same global shape as the stacked-engine
+    state for every built-in strategy), so the serving layer drives both
+    engines through one code path, and each slot's round sequence is the
+    solo ``shard_map`` loop body bit-for-bit: finished slots are
+    select-masked exactly like the vmapped ``lax.while_loop`` would.
+    """
+    from jax import tree_util
+
+    step_kw = dict(problem=problem, recolor_degrees=recolor_degrees,
+                   backend=backend)
+    mr = max_rounds
+
+    def device_step(st, carry):
+        stats.traces += 1       # python side effect: fires only at trace time
+        st1 = {k: v[0] for k, v in st.items()}          # strip part axis
+
+        def one(c):
+            fresh = c["rounds"] < 0
+            colors = _recolor_part(st1, c["colors"][0], c["ghost"][0],
+                                   c["lose_l"][0] & fresh,
+                                   c["lose_g"][0] & fresh, **step_kw)
+            ex_state = tree_util.tree_map(lambda x: x[0], c["ex_state"])
+            ghost, nbytes, ex_state = strategy.device(
+                st1, colors, ex_state, axis="p", n_parts=n_parts)
+            colors, lose_l, lose_g, conf = _round_part(st1, colors, ghost,
+                                                       **step_kw)
+            conf = jax.lax.psum(conf, "p")
+            rounds = c["rounds"] + 1
+            new = {
+                "colors": colors[None], "ghost": ghost[None],
+                "lose_l": lose_l[None], "lose_g": lose_g[None],
+                "ex_state": tree_util.tree_map(lambda x: x[None], ex_state),
+                "conf": conf, "rounds": rounds,
+                "total": c["total"] + conf,
+                "bytes": c["bytes"].at[rounds].set(nbytes),
+            }
+            # Finished slots still ride the (batched) collectives but
+            # their carries are frozen — bit-identical to solo runs.
+            live = (c["conf"] > 0) & (c["rounds"] < mr)
+            out = tree_util.tree_map(
+                lambda old, upd: jnp.where(live, upd, old), c, new)
+            done = (out["conf"] <= 0) | (out["rounds"] >= mr)
+            return out, done
+
+        return jax.vmap(one)(carry)
+
+    return device_step
+
+
+def _slot_refill_core(carry, slot, c0, g0, a0, ex_init):
+    """Scatter one fresh request into slot ``slot`` of the batched carry.
+
+    Engine-agnostic: the simulate engine calls it on the full stacked
+    carry, the shard_map engine maps it per device (``ex_init`` then
+    arrives sliced over the part axis like everything else).
+    """
+    from jax import tree_util
+
+    out = dict(carry)
+    out["colors"] = carry["colors"].at[slot].set(c0)
+    out["ghost"] = carry["ghost"].at[slot].set(g0)
+    out["lose_l"] = carry["lose_l"].at[slot].set(a0)
+    out["lose_g"] = carry["lose_g"].at[slot].set(False)
+    out["ex_state"] = tree_util.tree_map(
+        lambda buf, init: buf.at[slot].set(init), carry["ex_state"], ex_init)
+    out["conf"] = carry["conf"].at[slot].set(1)         # sentinel: step me
+    out["rounds"] = carry["rounds"].at[slot].set(-1)
+    out["total"] = carry["total"].at[slot].set(0)
+    out["bytes"] = carry["bytes"].at[slot].set(0)
+    return out
+
+
 def aot_compile(jitted, *args):
     """Lower + compile ``jitted`` for ``args``: ``(callable, compile_ms)``.
 
@@ -313,7 +398,12 @@ class ColoringPlan:
             self.raw_fn, self._fn = _build_shard_map_fn(
                 strategy, backend, n_parts=pg.n_parts, mesh=mesh,
                 st_keys=list(st_np), **kw)
-            self.raw_step = None        # host-stepped path is simulate-only
+            # The mesh-native slot-engine step: shard_mapped by
+            # slot_step(), host-scheduled by the serving layer exactly
+            # like the simulate engine's raw_step.
+            self.raw_step = _build_shard_map_step(
+                strategy, backend, n_parts=pg.n_parts, **kw)
+            self._mesh = mesh
             # Upload the static tables once, already laid out over the
             # mesh: without this every plan.run() implicitly re-shards
             # (re-transfers) the whole state dict into the executable.
@@ -329,6 +419,7 @@ class ColoringPlan:
             self._fn = jax.jit(partial(self.raw_fn, self._st),
                                donate_argnums=(0,))
             self._st_is_arg = False
+            self._mesh = None
         self._compiled = None           # AOT executable, built on first run
         self.stats.build_ms = (time.perf_counter() - t0) * 1e3
 
@@ -356,6 +447,134 @@ class ColoringPlan:
             c0 = np.where(self._real, colors0[self._gids], 0)
             g0 = np.where(self._ghost_real, colors0[self._ghost_gids], 0)
         return c0, g0, active0, np.int32(0 if seed is None else seed)
+
+    # -- slot-engine surface (continuous batching) -------------------------
+    #
+    # The serving layer (repro.serve.coloring) schedules waves of requests
+    # through a batched carry with one slot per in-flight request.  These
+    # methods are the engine-agnostic surface it builds its per-bucket AOT
+    # programs from: on ``simulate`` the request axis is an outer vmap; on
+    # ``shard_map`` the step/refill cores are shard_mapped over the mesh
+    # with the request axis vmapped *inside* the mapped program, so the
+    # exchange stays a real collective while the scheduler stays on host.
+
+    def _slot_specs(self, ex_init):
+        """Carry ``PartitionSpec`` tree: part-stacked leaves shard dim 1."""
+        from jax.sharding import PartitionSpec as PS
+
+        part = PS(None, "p")
+        return {
+            "colors": part, "ghost": part, "lose_l": part, "lose_g": part,
+            "ex_state": jax.tree_util.tree_map(lambda _: part, ex_init),
+            "conf": PS(), "rounds": PS(), "total": PS(), "bytes": PS(),
+        }
+
+    def slot_ex_init(self):
+        """Per-request exchange state, part axis leading (both engines)."""
+        return self._strategy.init_state(self._st)
+
+    def slot_carry(self, bucket: int, ex_init):
+        """All-slots-idle batched carry for a ``bucket``-wide wave.
+
+        Idle slots have ``rounds == max_rounds`` and ``conf == 0`` so the
+        step treats them as finished until a refill arrives.  On
+        ``shard_map`` every leaf is committed with its ``NamedSharding``
+        up front, so the AOT-lowered step/refill programs record mesh
+        shardings instead of single-device placements.
+        """
+        p, nl = self.n_parts, self.n_local
+        g = self._ghost_gids.shape[1]
+        mr = self.key.max_rounds
+        stack = lambda x: jnp.broadcast_to(x[None], (bucket,) + x.shape)
+        carry = {
+            "colors": jnp.zeros((bucket, p, nl), jnp.int32),
+            "ghost": jnp.zeros((bucket, p, g), jnp.int32),
+            "lose_l": jnp.zeros((bucket, p, nl), bool),
+            "lose_g": jnp.zeros((bucket, p, g), bool),
+            "ex_state": jax.tree_util.tree_map(stack, ex_init),
+            "conf": jnp.zeros((bucket,), jnp.int32),
+            "rounds": jnp.full((bucket,), mr, jnp.int32),
+            "total": jnp.zeros((bucket,), jnp.int32),
+            "bytes": jnp.zeros((bucket, mr + 1), jnp.int32),
+        }
+        if self.key.engine != "shard_map":
+            return carry
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+
+        specs = self._slot_specs(ex_init)
+        put = lambda x, s: jax.device_put(x, NamedSharding(self._mesh, s))
+        out = {k: put(v, specs[k]) for k, v in carry.items()
+               if k != "ex_state"}
+        out["ex_state"] = jax.tree_util.tree_map(
+            lambda x: put(x, PS(None, "p")), carry["ex_state"])
+        return out
+
+    def slot_step(self):
+        """``step(carry) -> (carry, done)`` over the whole slot batch.
+
+        ``done`` is a ``(bucket,)`` bool vector; finished slots are
+        select-masked so their carries stay frozen (bit-identical to the
+        solo loop's converged state) while they wait to be harvested.
+        """
+        raw, st, mr = self.raw_step, self._st, self.key.max_rounds
+        if self.key.engine == "shard_map":
+            from jax.sharding import PartitionSpec as PS
+
+            cspecs = self._slot_specs(self.slot_ex_init())
+            mapped = _shard_map(
+                raw, mesh=self._mesh,
+                in_specs=({k: PS("p") for k in st}, cspecs),
+                out_specs=(cspecs, PS()),
+            )
+            return lambda carry: mapped(st, carry)
+
+        def step(carry):
+            new = jax.vmap(raw, in_axes=(None, 0))(st, carry)
+            live = (carry["conf"] > 0) & (carry["rounds"] < mr)
+
+            def sel(old, upd):
+                keep = live.reshape(live.shape + (1,) * (upd.ndim - 1))
+                return jnp.where(keep, upd, old)
+
+            out = jax.tree_util.tree_map(sel, carry, new)
+            done = (out["conf"] <= 0) | (out["rounds"] >= mr)
+            return out, done
+
+        return step
+
+    def slot_refill(self, ex_init):
+        """``refill(carry, slot, c0, g0, a0) -> carry`` scattering a fresh
+        request into one slot (fresh-slot sentinel: ``rounds=-1, conf=1``)."""
+        if self.key.engine == "shard_map":
+            from jax.sharding import PartitionSpec as PS
+
+            part = PS("p")
+            mapped = _shard_map(
+                _slot_refill_core, mesh=self._mesh,
+                in_specs=(self._slot_specs(ex_init), PS(), part, part, part,
+                          jax.tree_util.tree_map(lambda _: part, ex_init)),
+                out_specs=self._slot_specs(ex_init),
+            )
+            return lambda carry, slot, c0, g0, a0: mapped(
+                carry, slot, c0, g0, a0, ex_init)
+        return lambda carry, slot, c0, g0, a0: _slot_refill_core(
+            carry, slot, c0, g0, a0, ex_init)
+
+    def slot_args(self, c0, g0, a0):
+        """Device-place one request's refill inputs for the slot engine.
+
+        On ``shard_map`` the inputs are committed with their mesh
+        sharding so the AOT refill executable sees consistent input
+        shardings on every call.
+        """
+        if self.key.engine == "shard_map":
+            from jax.sharding import NamedSharding, PartitionSpec as PS
+
+            ns = NamedSharding(self._mesh, PS("p"))
+            return (jax.device_put(jnp.asarray(c0), ns),
+                    jax.device_put(jnp.asarray(g0), ns),
+                    jax.device_put(jnp.asarray(a0), ns))
+        return (jnp.asarray(c0), jnp.asarray(g0), jnp.asarray(a0))
 
     def run(self, color_mask=None, colors0=None, seed=None) -> ColoringResult:
         """Execute one recoloring request through the compiled program.
@@ -471,6 +690,15 @@ class PlanCache:
     def keys(self):
         """Keys from least- to most-recently used."""
         return list(self._plans)
+
+    def plans(self):
+        """Snapshot of cached plan objects, least- to most-recently used.
+
+        The public iteration surface for accounting (e.g. the serving
+        layer sums ``plan.stats.compiles`` across a cache) — does not
+        touch LRU order.
+        """
+        return list(self._plans.values())
 
     def clear(self) -> None:
         items = list(self._plans.items())

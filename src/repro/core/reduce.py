@@ -53,6 +53,7 @@ from repro.core.plan import (
     get_plan,
 )
 from repro.core.quality import color_histogram_device
+from repro.core.registry import Registry
 from repro.core.validate import num_colors
 from repro.graph.partition import PartitionedGraph
 
@@ -64,6 +65,7 @@ __all__ = [
     "ReductionStats",
     "get_order",
     "get_reduce_plan",
+    "list_orders",
     "reduce_colors",
     "reduce_colors_batch",
     "register_order",
@@ -93,11 +95,14 @@ def _score_least_used_first(color, hist):
     return -hist.astype(jnp.float32)
 
 
-ORDERS: dict[str, callable] = {
-    "reverse": _score_reverse,
-    "largest_first": _score_largest_first,
-    "least_used_first": _score_least_used_first,
-}
+ORDERS: Registry = Registry(
+    "order",
+    {
+        "reverse": _score_reverse,
+        "largest_first": _score_largest_first,
+        "least_used_first": _score_least_used_first,
+    },
+)
 
 
 def register_order(name: str, score_fn) -> None:
@@ -109,13 +114,16 @@ def register_order(name: str, score_fn) -> None:
     by *name*: re-registering a different function under an existing name
     leaves stale plans in any live cache.
     """
-    ORDERS[name] = score_fn
+    ORDERS.register(name, score_fn)
+
+
+def list_orders() -> list[str]:
+    """Sorted registered order names (drives the CLI choices)."""
+    return ORDERS.names()
 
 
 def get_order(order: str):
-    if order not in ORDERS:
-        raise ValueError(f"unknown order {order!r}; have {sorted(ORDERS)}")
-    return ORDERS[order]
+    return ORDERS.resolve(order)
 
 
 # ---------------------------------------------------------------------------

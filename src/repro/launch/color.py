@@ -42,8 +42,11 @@ import time
 
 import jax
 
+from repro.core.backend import list_backends
 from repro.core.baseline import color_baseline
 from repro.core.distributed import color_distributed
+from repro.core.exchange import list_exchanges
+from repro.core.reduce import list_orders
 from repro.core.validate import is_proper_d1, is_proper_d2, is_proper_pd2
 from repro.graph import generators as gen
 from repro.graph.partition import partition_graph
@@ -71,7 +74,7 @@ VALIDATORS = {
 
 def run_stream(args) -> None:
     """Mixed-topology replay through the continuous-batching frontend."""
-    from repro.serve import ColoringFrontend
+    from repro.serve import ColoringFrontend, ColoringRequest
 
     specs = [s for s in args.stream.split("|") if s]
     graphs = [make_graph(s) for s in specs]
@@ -87,7 +90,8 @@ def run_stream(args) -> None:
         problem=args.problem, recolor_degrees=not args.no_recolor_degrees,
         backend=args.backend, exchange=args.exchange, engine=args.engine,
         reduce_passes=args.reduce_passes, reduce_order=args.reduce_order)
-    pairs = [(pgs[i % len(pgs)], {}) for i in range(args.requests)]
+    pairs = [(pgs[i % len(pgs)], ColoringRequest())
+             for i in range(args.requests)]
 
     t0 = time.time()
     cold_results = fe.run_stream(pairs)
@@ -95,8 +99,10 @@ def run_stream(args) -> None:
     t0 = time.time()
     results = fe.run_stream(pairs)              # warm replay
     warm_s = time.time() - t0
+    first_for_pg = {}
     for (pg, _), cold, warm in zip(pairs, cold_results, results):
         g = graphs[pgs.index(pg)]
+        first_for_pg.setdefault(id(pg), warm)
         if not VALIDATORS[args.problem](g, warm.colors):
             raise SystemExit(f"improper coloring for {g.name}")
         if (cold.colors != warm.colors).any():
@@ -109,7 +115,7 @@ def run_stream(args) -> None:
           f"warm {s.warm_ms_mean:.2f}ms/request; refills={s.refills})")
     # Only topologies the stream actually reached (requests may be fewer).
     for spec, pg in zip(specs[:args.requests], pgs):
-        res = results[pairs.index((pg, {}))]
+        res = first_for_pg[id(pg)]
         print(f"[color]   {spec}: colors={res.n_colors} rounds={res.rounds} "
               f"comm_total={res.comm_bytes_total}B")
 
@@ -129,9 +135,9 @@ def main() -> None:
     ap.add_argument("--strategy", default="block",
                     choices=["block", "edge_balanced", "random"])
     ap.add_argument("--backend", default="reference",
-                    choices=["reference", "pallas", "pallas_fused"])
+                    choices=list_backends())
     ap.add_argument("--exchange", default="all_gather",
-                    choices=["all_gather", "halo", "delta", "sparse_delta"])
+                    choices=list_exchanges())
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "shard_map", "simulate"])
     ap.add_argument("--no-recolor-degrees", action="store_true")
@@ -144,7 +150,7 @@ def main() -> None:
                     help="post-color quality: up to P iterative color-"
                          "reduction passes (repro.core.reduce)")
     ap.add_argument("--reduce-order", default="reverse",
-                    choices=["reverse", "largest_first", "least_used_first"],
+                    choices=list_orders(),
                     help="class-rebuild order used by --reduce-passes")
     args = ap.parse_args()
 

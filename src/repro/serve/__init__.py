@@ -1,5 +1,22 @@
 """Serving layer: token generation + continuous-batching recoloring."""
-from repro.serve.coloring import ColoringFrontend, ColoringService, ServiceStats
+from repro.serve.coloring import (
+    AdmissionError,
+    ColoringFrontend,
+    ColoringRequest,
+    ColoringService,
+    ServiceStats,
+    Ticket,
+    as_request,
+)
 from repro.serve.engine import ServeEngine
 
-__all__ = ["ServeEngine", "ColoringFrontend", "ColoringService", "ServiceStats"]
+__all__ = [
+    "AdmissionError",
+    "ColoringFrontend",
+    "ColoringRequest",
+    "ColoringService",
+    "ServeEngine",
+    "ServiceStats",
+    "Ticket",
+    "as_request",
+]

@@ -152,22 +152,75 @@ for combo, plan in plans.items():
     assert warm.rounds == sim.rounds
     assert list(warm.comm_bytes_by_round) == list(sim.comm_bytes_by_round)
 
-# The service's shard_map path is sequential warm-path execution.
+# The service's shard_map batch path runs through the mesh slot
+# engine: one persistent shard_map program per bucket, harvest/refill
+# scheduled from the host.
 svc = ColoringService(pg, problem="d1", engine="shard_map", cache=cache)
+assert svc.plan.raw_step is not None
 outs = svc.run_batch([{}, {"color_mask": np.arange(g.n) % 2 == 0}, {}])
 assert (outs[0].colors == outs[2].colors).all()
 assert is_proper_d1(g, outs[0].colors)
 assert svc.stats.requests == 3
+assert svc.buckets == [4]
 print("OK")
 """)
     assert "OK" in out
 
 
-def test_frontend_stream_shard_map():
-    """The cross-topology frontend under the shard_map engine: requests
-    execute sequentially through each plan's warm path, still routed per
-    topology, with results (including reduce_passes) bit-identical to
-    the simulate engine and to solo runs."""
+def test_frontend_stream_shard_map_slot_engine():
+    """The tentpole pin (ISSUE-7 acceptance): the cross-topology frontend
+    on a 4-device mesh batches requests through the persistent shard_map
+    slot program — finished slots are harvested and refilled mid-wave
+    (``stats.refills > 0``) and every per-request result is bit-identical
+    to its solo ``plan.run`` on the same engine *and* to the simulate
+    engine (colors, rounds, and measured per-round comm bytes)."""
+    out = run_py("""
+import numpy as np
+from repro.graph.generators import hex_mesh, rmat
+from repro.graph.partition import partition_graph
+from repro.core.plan import PlanCache, get_plan
+from repro.serve import ColoringFrontend, ColoringRequest
+from repro.core.validate import is_proper_d1
+
+g1 = hex_mesh(12, 6, 6)
+g2 = rmat(8, 6, seed=5)
+pg1 = partition_graph(g1, 4, second_layer=True)
+pg2 = partition_graph(g2, 4, strategy="edge_balanced", second_layer=True)
+cache = PlanCache()
+fe = ColoringFrontend(engine="shard_map", cache=cache, max_batch=2)
+pairs = []
+for i in range(6):
+    for pg in (pg1, pg2):
+        req = (ColoringRequest() if i % 3 != 2 else
+               ColoringRequest(color_mask=np.arange(pg.n_global) % 2 == 0))
+        pairs.append((pg, req))
+results = fe.run_stream(pairs)
+for group in fe._groups.values():
+    assert group.plan.key.engine == "shard_map"
+    assert group.plan.raw_step is not None          # mesh slot program
+assert fe.stats.refills > 0                         # harvest/refill mid-wave
+assert fe.stats.batches >= 2
+assert fe.stats.requests == fe.stats.warm_requests == len(pairs)
+oracle = PlanCache()
+for (pg, req), res in zip(pairs, results):
+    solo = get_plan(pg, engine="shard_map", cache=cache).run(
+        **req.plan_inputs())
+    sim = get_plan(pg, engine="simulate", cache=oracle).run(
+        **req.plan_inputs())
+    assert (res.colors == solo.colors).all()
+    assert (res.colors == sim.colors).all()
+    assert res.rounds == solo.rounds == sim.rounds
+    assert list(res.comm_bytes_by_round) == list(sim.comm_bytes_by_round)
+assert is_proper_d1(g1, results[0].colors)
+print("OK")
+""", devices=4)
+    assert "OK" in out
+
+
+def test_frontend_stream_shard_map_with_reduction():
+    """reduce_passes>0 on the shard_map engine: the batched reduction's
+    supersteps ride the mesh slot engine (``run_many=group.execute``),
+    and results stay bit-identical to solo simulate-engine reduction."""
     out = run_py("""
 import numpy as np
 from repro.graph.generators import hex_mesh, rmat

@@ -1,0 +1,75 @@
+"""The shared plugin registry (ISSUE-7 satellite).
+
+Backends, exchange strategies, and reduction orders are three instances
+of one ``repro.core.registry.Registry`` — uniform registration, uniform
+``list_*()`` introspection, uniform "unknown X" errors — so a registered
+plugin is immediately addressable from ``get_*``, the CLI choices, and
+the serving layer alike.
+"""
+import pytest
+
+from repro.core.backend import BACKENDS, LocalBackend, list_backends
+from repro.core.exchange import EXCHANGES, ExchangeStrategy, list_exchanges
+from repro.core.reduce import ORDERS, list_orders
+from repro.core.registry import Registry
+
+
+def test_three_registries_share_one_helper():
+    for reg in (BACKENDS, EXCHANGES, ORDERS):
+        assert isinstance(reg, Registry)
+    assert list_backends() == sorted(BACKENDS)
+    assert list_exchanges() == sorted(EXCHANGES)
+    assert list_orders() == sorted(ORDERS)
+    assert {"reference", "pallas", "pallas_fused"} <= set(list_backends())
+    assert {"all_gather", "halo", "delta", "sparse_delta"} <= set(
+        list_exchanges())
+    assert {"reverse", "largest_first", "least_used_first"} <= set(
+        list_orders())
+
+
+def test_resolve_default_instance_and_name():
+    assert isinstance(BACKENDS.resolve(None), LocalBackend)   # default
+    be = BACKENDS.resolve("reference")
+    assert isinstance(be, LocalBackend)
+    assert BACKENDS.resolve(be) is be                         # passthrough
+    ex = EXCHANGES.resolve("sparse_delta")
+    assert isinstance(ex, ExchangeStrategy)
+    assert EXCHANGES.resolve(ex) is ex
+
+
+def test_unknown_names_error_uniformly():
+    for reg, kind in ((BACKENDS, "backend"), (EXCHANGES, "exchange"),
+                      (ORDERS, "order")):
+        with pytest.raises(ValueError, match=f"unknown {kind} 'nope'"):
+            reg.resolve("nope")
+        with pytest.raises(ValueError, match="registered:"):
+            reg.resolve("nope")
+
+
+def test_register_and_remove_roundtrip():
+    reg = Registry("widget", {"a": 1})
+    reg.register("b", 2)
+    assert reg.names() == ["a", "b"]
+    assert reg.resolve("b") == 2
+    assert len(reg) == 2 and "b" in reg
+    del reg["b"]
+    assert reg.names() == ["a"]
+    with pytest.raises(ValueError, match="unknown widget 'b'"):
+        reg.resolve("b")
+    with pytest.raises(TypeError, match="name must be a non-empty str"):
+        reg.register("", 3)
+    with pytest.raises(TypeError, match="cannot register None"):
+        reg.register("c", None)
+
+
+def test_instantiate_registries_build_fresh_entries():
+    class Thing:
+        pass
+
+    reg = Registry("thing", {"t": Thing}, instance_of=Thing,
+                   instantiate=True, default="t")
+    a, b = reg.resolve("t"), reg.resolve(None)
+    assert isinstance(a, Thing) and isinstance(b, Thing)
+    assert a is not b                     # fresh instance per resolve
+    t = Thing()
+    assert reg.resolve(t) is t            # instances pass through

@@ -13,6 +13,8 @@ Covers the tentpole and the satellite bugfixes:
 * the reduction plan is resolved once per service and reused across
   requests even with ``cache=False`` (zero retraces).
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -22,7 +24,15 @@ from repro.core.reduce import ReductionPlan, reduce_colors
 from repro.core.validate import is_proper_d1
 from repro.graph.generators import grid_2d, hex_mesh, mycielskian
 from repro.graph.partition import partition_graph
-from repro.serve import ColoringFrontend, ColoringService
+from repro.serve import (
+    AdmissionError,
+    ColoringFrontend,
+    ColoringRequest,
+    ColoringService,
+    Ticket,
+    as_request,
+)
+from repro.serve import coloring as serve_coloring
 
 GRAPHS = {
     "hex": hex_mesh(6, 4, 4),
@@ -216,6 +226,144 @@ def test_stream_with_reduction_matches_solo():
 # Stats attribution (frontend-level; the service-level pin lives in
 # test_plan.py::test_service_stats_cold_vs_warm).
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# ISSUE-7 API: native ColoringRequest / Ticket, scheduling, backpressure.
+# ---------------------------------------------------------------------------
+
+def test_submit_returns_ticket_immediately():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache())
+    t = fe.submit(PGS["hex"], ColoringRequest())
+    assert isinstance(t, Ticket)
+    assert t.state == "queued" and not t.done()
+    res = t.result()
+    assert t.done() and t.state == "done"
+    solo = get_plan(PGS["hex"], engine="simulate", cache=fe.cache).run()
+    assert (res.colors == solo.colors).all()
+    assert t.result() is res                          # idempotent claim
+
+
+def test_submit_pumps_waves_opportunistically():
+    """A steady submit-only caller keeps the mesh busy: a wave starts as
+    soon as a topology has max_batch queued, and in-flight waves advance
+    between submits — without any drain() call."""
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(), max_batch=2)
+    tickets = [fe.submit(PGS["hex"], ColoringRequest()) for _ in range(8)]
+    assert fe.stats.batches >= 1                      # started mid-stream
+    done_before_drain = sum(t.done() for t in tickets)
+    results = fe.drain(tickets)
+    assert done_before_drain > 0                      # settled mid-stream
+    solo = get_plan(PGS["hex"], engine="simulate", cache=fe.cache).run()
+    for t in tickets:
+        assert (results[t].colors == solo.colors).all()
+    assert fe.stats.warm_requests == len(tickets)
+
+
+def test_priority_deadline_scheduling_order(monkeypatch):
+    """Queued requests run highest priority first; ties break by the
+    earliest deadline; no deadline sorts last."""
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(), max_batch=1)
+    order = []
+    orig = fe._note_running
+    monkeypatch.setattr(
+        fe, "_note_running", lambda t: (order.append(t), orig(t))[1])
+    t_low = fe.enqueue(PGS["hex"], ColoringRequest())
+    t_far = fe.enqueue(PGS["hex"], ColoringRequest(deadline_ms=60_000))
+    t_soon = fe.enqueue(PGS["hex"], ColoringRequest(deadline_ms=5))
+    t_high = fe.enqueue(PGS["hex"], ColoringRequest(priority=5))
+    fe.drain()
+    assert order == [t_high, t_soon, t_far, t_low]
+
+
+def test_backpressure_reject():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(),
+                          max_pending=2, admission="reject")
+    t1 = fe.enqueue(PGS["hex"], ColoringRequest())
+    t2 = fe.enqueue(PGS["hex"], ColoringRequest())
+    assert fe.pending == 2
+    with pytest.raises(AdmissionError, match="pending queue full"):
+        fe.enqueue(PGS["hex"], ColoringRequest())
+    assert fe.stats.rejected == 1
+    out = fe.drain([t1, t2])
+    assert fe.pending == 0
+    solo = get_plan(PGS["hex"], engine="simulate", cache=fe.cache).run()
+    assert (out[t1].colors == solo.colors).all()
+    assert (out[t2].colors == solo.colors).all()
+    # The queue drained, so admission opens up again.
+    assert fe.submit(PGS["hex"], ColoringRequest()).result() is not None
+
+
+def test_backpressure_shed_least_urgent():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(),
+                          max_pending=2, admission="shed")
+    t1 = fe.enqueue(PGS["hex"], ColoringRequest(priority=5))
+    t2 = fe.enqueue(PGS["hex"], ColoringRequest(priority=3))
+    # Incoming is the least urgent: shed on arrival, never raises.
+    t3 = fe.enqueue(PGS["hex"], ColoringRequest(priority=1))
+    assert t3.state == "shed" and t3.done()
+    with pytest.raises(AdmissionError, match="shed"):
+        t3.result()
+    # Incoming outranks a queued request: the worst queued one is shed.
+    t4 = fe.enqueue(PGS["hex"], ColoringRequest(priority=9))
+    assert t2.state == "shed"
+    with pytest.raises(AdmissionError, match="shed"):
+        t2.result()
+    assert t4.state == "queued" and fe.pending == 2
+    assert fe.stats.shed == 2 and fe.stats.rejected == 0
+    out = fe.drain([t1, t4])
+    solo = get_plan(PGS["hex"], engine="simulate", cache=fe.cache).run()
+    assert (out[t1].colors == solo.colors).all()
+    assert (out[t4].colors == solo.colors).all()
+
+
+def test_tenant_quota_rejects_and_accounts():
+    fe = ColoringFrontend(engine="simulate", cache=PlanCache(),
+                          tenant_quota=1)
+    ta = fe.enqueue(PGS["hex"], ColoringRequest(tenant="a"))
+    with pytest.raises(AdmissionError, match="tenant 'a'"):
+        fe.enqueue(PGS["hex"], ColoringRequest(tenant="a"))
+    tb = fe.enqueue(PGS["hex"], ColoringRequest(tenant="b"))  # other tenant ok
+    assert fe.stats.by_tenant["a"] == {
+        "admitted": 1, "completed": 0, "rejected": 1, "shed": 0}
+    ta.result(), tb.result()
+    assert fe.stats.by_tenant["a"]["completed"] == 1
+    assert fe.stats.by_tenant["b"] == {
+        "admitted": 1, "completed": 1, "rejected": 0, "shed": 0}
+    # Completion frees the quota slot.
+    assert fe.submit(PGS["hex"], ColoringRequest(tenant="a")).result()
+
+
+def test_legacy_dict_requests_warn_once(monkeypatch):
+    monkeypatch.setattr(serve_coloring, "_LEGACY_WARNED", False)
+    with pytest.warns(DeprecationWarning, match="dict coloring requests"):
+        req = as_request({"color_mask": None})
+    assert isinstance(req, ColoringRequest)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                # once per process:
+        as_request({"seed": None})                    # no second warning
+        as_request(priority=1)                        # kwargs never warn
+    with pytest.raises(TypeError, match="unknown request keys"):
+        as_request({"mask": None})
+
+
+def test_ticket_resolves_after_plan_evicted_mid_stream():
+    """An admitted ticket whose plan is evicted from the cache before it
+    runs still completes: the retired group drains its queue."""
+    cache = PlanCache(maxsize=1)
+    fe = ColoringFrontend(engine="simulate", cache=cache)
+    t = fe.enqueue(PGS["hex"], ColoringRequest())
+    key_hex = next(iter(fe._groups))
+    # Routing another topology evicts hex's plan (maxsize=1) with the
+    # ticket still queued on its (now retired) group.
+    fe.run_stream([(PGS["grid"], {})] * 2)
+    assert key_hex not in fe._groups
+    res = t.result()
+    assert t.done()
+    oracle = PlanCache()
+    solo = get_plan(PGS["hex"], engine="simulate", cache=oracle).run()
+    assert (res.colors == solo.colors).all()
+    assert not fe._retired
+
 
 def test_frontend_stats_attribution():
     fe = ColoringFrontend(engine="simulate", cache=PlanCache())
