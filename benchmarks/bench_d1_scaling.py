@@ -24,13 +24,17 @@ from repro.core.validate import is_proper_d1
 from repro.graph.generators import hex_mesh, rmat
 from repro.graph.partition import partition_graph
 
-EXCHANGES = ("all_gather", "halo", "delta", "sparse_delta")
+EXCHANGES = ("all_gather", "halo", "delta", "sparse_delta", "hier_delta")
 
 
 def _derived(res) -> str:
-    return (f"colors={res.n_colors};rounds={res.rounds};"
-            f"comm={res.comm_bytes_per_round};commtot={res.comm_bytes_total};"
-            f"conf={res.total_conflicts}")
+    out = (f"colors={res.n_colors};rounds={res.rounds};"
+           f"comm={res.comm_bytes_per_round};commtot={res.comm_bytes_total};"
+           f"conf={res.total_conflicts}")
+    if res.comm_bytes_by_level is not None and res.comm_bytes_intra:
+        out += (f";intra={res.comm_bytes_intra};"
+                f"inter={res.comm_bytes_inter}")
+    return out
 
 
 def run_exchange(toy: bool = False) -> list[str]:
@@ -38,21 +42,36 @@ def run_exchange(toy: bool = False) -> list[str]:
 
     ``toy=True`` is the CI bench-smoke variant: a small mesh, same
     strategies, completing in seconds; the emitted ``by_round`` columns
-    are the per-PR comm-bytes regression surface.
+    are the per-PR comm-bytes regression surface.  Asserts the tentpole
+    comm ordering — measured ``hier_delta < sparse_delta < all_gather``
+    bytes with bit-identical colorings — so the hierarchy's byte win is
+    regression-checked wherever this bench runs.
     """
     rows = []
     g = (hex_mesh(10, 6, 6, name="hex_toy") if toy
          else hex_mesh(24, 16, 16, name="queen_like"))
     parts = 4 if toy else 8
     pg = partition_graph(g, parts, strategy="block")
+    results = {}
     for exchange in EXCHANGES:
         res, us = timed(lambda pg=pg, ex=exchange: color_distributed(
             pg, problem="d1", engine="simulate", exchange=ex))
         assert is_proper_d1(g, res.colors)
+        results[exchange] = res
         by_round = "/".join(str(int(b)) for b in res.comm_bytes_by_round)
         rows.append(row(
             f"fig3/exchange/{g.name}/p{parts}/reference/{exchange}", us,
             _derived(res) + f";by_round={by_round}"))
+    ag, sd, hd = (results[e] for e in
+                  ("all_gather", "sparse_delta", "hier_delta"))
+    assert (sd.colors == ag.colors).all() and (hd.colors == ag.colors).all(), \
+        "exchange strategies must be bit-identical"
+    assert sd.rounds == ag.rounds == hd.rounds
+    assert hd.comm_bytes_total < sd.comm_bytes_total < ag.comm_bytes_total, (
+        f"comm ordering violated: hier={hd.comm_bytes_total} "
+        f"sparse={sd.comm_bytes_total} all_gather={ag.comm_bytes_total}")
+    assert hd.comm_bytes_intra > 0 and hd.comm_bytes_inter > 0, \
+        "hier_delta must report a nonzero intra/inter split here"
     return rows
 
 

@@ -5,17 +5,70 @@ axis and partitions in slabs along it).  ``derived`` = rounds + conflicts:
 the paper's observation is that boundary size doubling drives recoloring
 workload, visible here as conflicts/rounds staying flat while total work
 scales.
+
+:func:`run_exchange_sweep` is the weak-scaling view of the exchange
+tentpole: all_gather / sparse_delta / hier_delta over hex-mesh and RMAT
+inputs that grow with the part count, with bit-identity asserted per
+point and the measured intra-node vs inter-node byte columns emitted to
+the JSON artifact (the billion-edge scale-out regression surface).
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.distributed import color_distributed
 from repro.core.validate import is_proper_d1, is_proper_d2
-from repro.graph.generators import hex_mesh
+from repro.graph.generators import hex_mesh, rmat
 from repro.graph.partition import partition_graph
 
 SLAB = 8          # x-planes per part
 NY = NZ = 16      # plane = 256 vertices; per-part = 2048 vertices
+
+SWEEP_EXCHANGES = ("all_gather", "sparse_delta", "hier_delta")
+
+
+def run_exchange_sweep(toy: bool = False) -> list[str]:
+    """Exchange sweep with inputs growing alongside the part count.
+
+    Weak-scaling companion of ``bench_d1_scaling.run_exchange``: per
+    device count the mesh grows one slab per part and the RMAT scale
+    grows with log2(parts), so each point keeps per-part work roughly
+    constant while the boundary (and thus the exchange payload) grows.
+    Emits ``intra``/``inter`` byte columns for every strategy (flat ones
+    book all bytes as inter-node) and asserts bit-identical colorings
+    per point.  ``toy=True`` is the CI smoke variant.
+    """
+    rows = []
+    parts_sweep = (2, 4) if toy else (2, 4, 8)
+    slab, ny, nz = (5, 6, 6) if toy else (SLAB, NY, NZ)
+    rmat_scale = 9 if toy else 12
+    for p in parts_sweep:
+        graphs = [
+            hex_mesh(slab * p, ny, nz, name=f"hex_w{p}"),
+            rmat(rmat_scale + p.bit_length() - 1, 8, seed=7,
+                 name=f"rmat_w{p}"),
+        ]
+        for g in graphs:
+            pg = partition_graph(g, p, strategy="block")
+            base = None
+            for exchange in SWEEP_EXCHANGES:
+                res, us = timed(lambda pg=pg, ex=exchange: color_distributed(
+                    pg, problem="d1", engine="simulate", exchange=ex))
+                assert is_proper_d1(g, res.colors), (g.name, p, exchange)
+                if base is None:
+                    base = res
+                else:
+                    assert np.array_equal(res.colors, base.colors), \
+                        (g.name, p, exchange, "colorings must be bit-equal")
+                    assert res.rounds == base.rounds
+                rows.append(row(
+                    f"weak_exchange/{g.name}/p{p}/{exchange}", us,
+                    f"colors={res.n_colors};rounds={res.rounds};"
+                    f"commtot={res.comm_bytes_total};"
+                    f"intra={res.comm_bytes_intra};"
+                    f"inter={res.comm_bytes_inter};n={g.n}"))
+    return rows
 
 
 def run(d2: bool = False) -> list[str]:

@@ -2,9 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Select subsets with
 ``python -m benchmarks.run [fig2 fig3 fig5 fig6 fig7 fig11 kernels a2a
-recolor quality serve_stream serve_stream_mesh exchange_smoke
-kernels_smoke recolor_smoke quality_smoke serve_stream_smoke
-serve_stream_mesh_smoke]``.
+recolor quality serve_stream serve_stream_mesh weak_exchange
+exchange_smoke weak_exchange_smoke kernels_smoke recolor_smoke
+quality_smoke serve_stream_smoke serve_stream_mesh_smoke]``.
 ``--json PATH`` additionally writes the rows as a JSON list of
 ``{name, us_per_call, derived}`` records — CI's bench-smoke job runs
 ``exchange_smoke`` (the fig3 exchange sweep at toy sizes) and uploads
@@ -56,7 +56,10 @@ SUITES = {
     "quality": lambda: bench_reduce.run(),
     "serve_stream": lambda: bench_serve_stream.run(),
     "serve_stream_mesh": lambda: bench_serve_stream.run_mesh(),
+    "weak_exchange": lambda: bench_weak_scaling.run_exchange_sweep(),
     "exchange_smoke": lambda: bench_d1_scaling.run_exchange(toy=True),
+    "weak_exchange_smoke": lambda: bench_weak_scaling.run_exchange_sweep(
+        toy=True),
     "kernels_smoke": lambda: bench_kernels.run(toy=True),
     "recolor_smoke": lambda: bench_recolor_timesteps.run(toy=True),
     "quality_smoke": lambda: bench_reduce.run(toy=True),

@@ -9,7 +9,26 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "has_ragged_all_to_all", "ragged_all_to_all"]
+
+
+def has_ragged_all_to_all() -> bool:
+    """True iff this jax exposes ``lax.ragged_all_to_all``.
+
+    The pinned 0.4.37 does not; the sparse exchanges then fall back to
+    the per-phase ``ppermute`` route-plan loop (where the fixed-capacity
+    buffer occupies the wire and measured < wire bytes), and the ragged
+    single-shot path lights up automatically once the pin moves.
+    """
+    return hasattr(jax.lax, "ragged_all_to_all")
+
+
+def ragged_all_to_all(operand, output, input_offsets, send_sizes,
+                      output_offsets, recv_sizes, *, axis_name):
+    """Thin forwarder so callers import one place (see gate above)."""
+    return jax.lax.ragged_all_to_all(
+        operand, output, input_offsets, send_sizes, output_offsets,
+        recv_sizes, axis_name=axis_name)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):

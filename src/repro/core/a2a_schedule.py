@@ -34,6 +34,8 @@ __all__ = [
     "phase_lower_bound",
     "RoutePlan",
     "exchange_route_plan",
+    "HierRoutePlan",
+    "hierarchical_route_plan",
 ]
 
 
@@ -131,4 +133,95 @@ def exchange_route_plan(
         dst_of=dst_of,
         src_of=src_of,
         edges=frozenset(e for ph in phases for e in ph),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierRoutePlan:
+    """Per-level phase schedules for a two-level (node, local) exchange.
+
+    The ``hier_delta`` strategy factors the ``P = n_nodes · node_size``
+    part axis into nodes of ``node_size`` consecutive parts (part ``p``
+    lives on node ``p // node_size``; part ``A·node_size`` is node
+    ``A``'s leader) and runs four stages per round:
+
+    * ``intra``  — a :class:`RoutePlan` over the *same-node* traffic
+      edges only: direct point-to-point pair exchange over the fast
+      links, scheduled contention-free exactly like the flat plan.
+    * ``up``     — ``node_size - 1`` gather phases; ``up[j-1]`` is the
+      ppermute perm sending member ``A·L + j`` → leader ``A·L`` on every
+      node simultaneously (a leader receives one message per phase).
+    * ``node``   — a :class:`RoutePlan` over the **node-level**
+      aggregated traffic graph (``n_nodes`` wide): one leader→leader
+      message per routed node pair, scheduled with the same edge
+      coloring.  Device code maps node phase ``(A, B)`` to the
+      part-level perm ``(A·L, B·L)``.
+    * ``down``   — ``node_size - 1`` broadcast phases; ``down[j-1]``
+      sends leader ``A·L`` → member ``A·L + j`` on every node.
+
+    Every cross-node traffic edge ``(o, q)`` is covered: ``o``'s pairs
+    ride up to ``o``'s leader, cross once per routed node edge, and are
+    re-broadcast to every member of ``q``'s node (the aggregation dedups
+    same-node ghosters, which is where the byte win comes from).
+    """
+
+    n_parts: int
+    node_size: int
+    n_nodes: int
+    intra: RoutePlan            # part-level same-node traffic
+    node: RoutePlan             # node-level aggregated cross traffic
+    up: tuple[tuple[tuple[int, int], ...], ...]
+    down: tuple[tuple[tuple[int, int], ...], ...]
+
+    @property
+    def n_phases(self) -> int:
+        """Total ppermute phases one round executes across all levels."""
+        return (self.intra.n_phases + len(self.up) + self.node.n_phases
+                + len(self.down))
+
+    def node_of(self, p: int) -> int:
+        return p // self.node_size
+
+    def leader_of(self, node: int) -> int:
+        return node * self.node_size
+
+
+def hierarchical_route_plan(
+    traffic: np.ndarray, node_size: int, *, recolor_degrees: bool = True
+) -> HierRoutePlan:
+    """Split a (P, P) traffic graph into the two-level phase schedules.
+
+    ``traffic[o, q]`` nonzero means owner part ``o`` must reach part
+    ``q``.  Same-node edges are edge-colored into the ``intra`` plan;
+    cross-node edges are collapsed onto the node-level traffic graph
+    (``node_traffic[A, B]`` = any part of ``A`` reaches any part of
+    ``B``) and edge-colored at node granularity — the aggregation the
+    ``hier_delta`` exchange performs in its up/down stages.
+    """
+    p = int(traffic.shape[0])
+    if node_size < 1 or p % node_size:
+        raise ValueError(
+            f"node_size {node_size} must divide the part count {p}")
+    n_nodes = p // node_size
+    node = np.arange(p) // node_size
+    same = node[:, None] == node[None, :]
+    live = np.asarray(traffic) != 0
+    intra = exchange_route_plan(
+        (live & same).astype(np.int64), recolor_degrees=recolor_degrees)
+    node_traffic = np.zeros((n_nodes, n_nodes), dtype=np.int64)
+    for o, q in zip(*np.nonzero(live & ~same)):
+        node_traffic[node[o], node[q]] = 1
+    node_plan = exchange_route_plan(
+        node_traffic, recolor_degrees=recolor_degrees)
+    ups = tuple(
+        tuple((a * node_size + j, a * node_size) for a in range(n_nodes))
+        for j in range(1, node_size)
+    )
+    downs = tuple(
+        tuple((a * node_size, a * node_size + j) for a in range(n_nodes))
+        for j in range(1, node_size)
+    )
+    return HierRoutePlan(
+        n_parts=p, node_size=node_size, n_nodes=n_nodes,
+        intra=intra, node=node_plan, up=ups, down=downs,
     )

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backend import LocalBackend, ReferenceBackend
-from repro.core.exchange import ExchangeStrategy
+from repro.core.exchange import ExchangeStrategy, level_split
 from repro.graph.csr import SENTINEL, Graph
 from repro.graph.partition import PAD_GID, PartitionedGraph, partition_graph
 
@@ -72,6 +72,25 @@ class ColoringResult:
     # merged across reduction passes (see ReductionResult.merged_result,
     # which keeps the per-pass split instead).
     comm_bytes_by_round: np.ndarray | None = None
+    # (rounds+1, 2) [intra-node, inter-node] split of the same payloads.
+    # Flat strategies book every byte as inter-node (any hop may cross
+    # hosts); hier_delta measures the two levels separately.  None under
+    # the same conditions as comm_bytes_by_round.
+    comm_bytes_by_level: np.ndarray | None = None
+
+    @property
+    def comm_bytes_intra(self) -> int:
+        """Total measured intra-node payload (0 when the split is absent)."""
+        lv = self.comm_bytes_by_level
+        return int(lv[:, 0].sum()) if lv is not None else 0
+
+    @property
+    def comm_bytes_inter(self) -> int:
+        """Total measured inter-node payload (= total when split absent)."""
+        lv = self.comm_bytes_by_level
+        if lv is None:
+            return int(self.comm_bytes_total)
+        return int(lv[:, 1].sum())
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +265,10 @@ def _make_loop(recolor, round_fn, exchange, all_sum, *, max_rounds: int):
         ghost, nbytes, ex_state = exchange(colors, ex_state0)
         colors, lose_l, lose_g, conf = round_fn(colors, ghost)
         conf = all_sum(conf)
-        bytes_hist = jnp.zeros((max_rounds + 1,), jnp.int32).at[0].set(nbytes)
+        # Byte history carries the [intra-node, inter-node] split per
+        # round (flat strategies are booked as inter; see level_split).
+        bytes_hist = jnp.zeros((max_rounds + 1, 2), jnp.int32)
+        bytes_hist = bytes_hist.at[0].set(level_split(nbytes))
         carry = {
             "colors": colors, "ghost": ghost, "lose_l": lose_l,
             "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
@@ -265,7 +287,7 @@ def _make_loop(recolor, round_fn, exchange, all_sum, *, max_rounds: int):
                 "colors": colors, "ghost": ghost, "lose_l": lose_l,
                 "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
                 "rounds": rounds, "total": c["total"] + conf,
-                "bytes": c["bytes"].at[rounds].set(nbytes),
+                "bytes": c["bytes"].at[rounds].set(level_split(nbytes)),
             }
 
         # The batched recoloring service vmaps this loop over a request

@@ -51,7 +51,7 @@ from repro.core.distributed import (
     _round_part,
     build_device_state,
 )
-from repro.core.exchange import ExchangeStrategy, get_exchange
+from repro.core.exchange import ExchangeStrategy, get_exchange, level_split
 from repro.core.validate import num_colors
 from repro.graph.partition import PAD_GID, PartitionedGraph
 
@@ -195,7 +195,7 @@ def _build_simulate_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
             "colors": colors, "ghost": ghost, "lose_l": lose_l,
             "lose_g": lose_g, "ex_state": ex_state, "conf": conf,
             "rounds": rounds, "total": carry["total"] + conf,
-            "bytes": carry["bytes"].at[rounds].set(nbytes),
+            "bytes": carry["bytes"].at[rounds].set(level_split(nbytes)),
         }
 
     return step
@@ -248,7 +248,7 @@ def _build_shard_map_step(strategy: ExchangeStrategy, backend: LocalBackend, *,
                 "ex_state": tree_util.tree_map(lambda x: x[None], ex_state),
                 "conf": conf, "rounds": rounds,
                 "total": c["total"] + conf,
-                "bytes": c["bytes"].at[rounds].set(nbytes),
+                "bytes": c["bytes"].at[rounds].set(level_split(nbytes)),
             }
             # Finished slots still ride the (batched) collectives but
             # their carries are frozen — bit-identical to solo runs.
@@ -495,7 +495,7 @@ class ColoringPlan:
             "conf": jnp.zeros((bucket,), jnp.int32),
             "rounds": jnp.full((bucket,), mr, jnp.int32),
             "total": jnp.zeros((bucket,), jnp.int32),
-            "bytes": jnp.zeros((bucket, mr + 1), jnp.int32),
+            "bytes": jnp.zeros((bucket, mr + 1, 2), jnp.int32),
         }
         if self.key.engine != "shard_map":
             return carry
@@ -616,7 +616,8 @@ class ColoringPlan:
         rounds = int(np.asarray(rounds).reshape(-1)[0])
         conf = int(np.asarray(conf).reshape(-1)[0])
         total = int(np.asarray(total).reshape(-1)[0])
-        by_round = np.asarray(nbytes).reshape(-1)[: rounds + 1]
+        by_level = np.asarray(nbytes).reshape(-1, 2)[: rounds + 1]
+        by_round = by_level.sum(axis=1)
         gathered = _gather_colors(self, np.asarray(colors))
         return ColoringResult(
             colors=gathered,
@@ -631,6 +632,7 @@ class ColoringPlan:
             exchange=self._strategy.name,
             comm_bytes_total=int(by_round.sum()),
             comm_bytes_by_round=by_round.astype(np.int64),
+            comm_bytes_by_level=by_level.astype(np.int64),
         )
 
     # _gather_colors only needs .n_global / .vertex_gid; mimic the

@@ -279,6 +279,7 @@ class ReductionResult:
             comm_bytes_total=total,
             comm_bytes_per_round=total // max(n_exchanges, 1),
             comm_bytes_by_round=None,
+            comm_bytes_by_level=None,
         )
 
 

@@ -158,8 +158,74 @@ def partition_graph(
     seed: int = 0,
 ) -> PartitionedGraph:
     """Partition ``graph`` into ``n_parts`` device-ready slabs."""
-    n = graph.n
     order, bounds = _split_points(graph, n_parts, strategy, seed)
+    return _partition_from_order(
+        graph, n_parts, order, bounds,
+        name=f"{graph.name}/p{n_parts}/{strategy}",
+        second_layer=second_layer,
+    )
+
+
+def two_level_partition(
+    graph: Graph,
+    n_nodes: int,
+    parts_per_node: int,
+    *,
+    strategy: str = "block",
+    second_layer: bool = False,
+    seed: int = 0,
+) -> PartitionedGraph:
+    """Hierarchy-aware partition: ``n_nodes`` slabs of ``parts_per_node``.
+
+    The layout the ``hier_delta`` exchange assumes (``launch.mesh.
+    factor_parts``): the graph is first split into ``n_nodes`` node slabs
+    with ``strategy``, then each slab is subdivided into
+    ``parts_per_node`` parts at equal cumulative-degree points (the
+    edge-balanced objective within the node).  Part
+    ``A · parts_per_node + j`` is the ``j``-th part of node ``A`` —
+    node-major, so cross-part edges between sub-parts of one slab stay
+    on that node's fast links while the node-level cut crosses the slow
+    axis.  The result is an ordinary :class:`PartitionedGraph` over
+    ``n_nodes · parts_per_node`` parts; every exchange strategy runs on
+    it, hierarchical or not.
+    """
+    order, nb = _split_points(graph, n_nodes, strategy, seed)
+    degs = graph.degrees.astype(np.int64)
+    bounds = [0]
+    for a in range(n_nodes):
+        seg = order[nb[a]: nb[a + 1]]
+        # +1 per vertex keeps zero-degree runs from collapsing into one
+        # sub-part (balance vertices as a tiebreak on edge balance).
+        cum = np.concatenate([[0], np.cumsum(degs[seg] + 1)])
+        targets = np.linspace(0, cum[-1], parts_per_node + 1)
+        sub = np.searchsorted(cum, targets).astype(np.int64)
+        sub[0], sub[-1] = 0, len(seg)
+        sub = np.maximum.accumulate(sub)
+        bounds.extend((nb[a] + sub[1:]).tolist())
+    return _partition_from_order(
+        graph, n_nodes * parts_per_node, order,
+        np.asarray(bounds, dtype=np.int64),
+        name=f"{graph.name}/2lvl{n_nodes}x{parts_per_node}/{strategy}",
+        second_layer=second_layer,
+    )
+
+
+def _partition_from_order(
+    graph: Graph,
+    n_parts: int,
+    order: np.ndarray,
+    bounds: np.ndarray,
+    *,
+    name: str,
+    second_layer: bool,
+) -> PartitionedGraph:
+    """Build the device-ready tables for an explicit vertex assignment.
+
+    ``order``/``bounds`` assign ``order[bounds[p]:bounds[p+1]]`` to part
+    ``p`` — the shared backend of :func:`partition_graph` (flat splits)
+    and :func:`two_level_partition` (node-major hierarchical splits).
+    """
+    n = graph.n
     owner = np.empty(n, dtype=np.int32)
     local_ix = np.empty(n, dtype=np.int64)
     part_verts: list[np.ndarray] = []
@@ -283,7 +349,7 @@ def partition_graph(
         n_parts=n_parts,
         n_local=n_local,
         ell_width=width,
-        name=f"{graph.name}/p{n_parts}/{strategy}",
+        name=name,
         vertex_gid=vertex_gid,
         deg=deg,
         is_boundary=is_boundary,

@@ -49,7 +49,9 @@ from repro.core.exchange import list_exchanges
 from repro.core.reduce import list_orders
 from repro.core.validate import is_proper_d1, is_proper_d2, is_proper_pd2
 from repro.graph import generators as gen
-from repro.graph.partition import partition_graph
+from repro.graph.partition import partition_graph, two_level_partition
+from repro.launch.cache import enable_compilation_cache
+from repro.launch.mesh import factor_parts
 
 
 def make_graph(spec: str):
@@ -72,17 +74,27 @@ VALIDATORS = {
 }
 
 
+def make_partition(g, args):
+    """Flat or two-level partition per ``--node-size`` (0 = flat)."""
+    needs_l2 = args.problem != "d1"
+    if args.node_size:
+        n_nodes, node_size = factor_parts(args.parts, args.node_size)
+        return two_level_partition(g, n_nodes, node_size,
+                                   strategy=args.strategy,
+                                   second_layer=needs_l2)
+    return partition_graph(g, args.parts, strategy=args.strategy,
+                           second_layer=needs_l2)
+
+
 def run_stream(args) -> None:
     """Mixed-topology replay through the continuous-batching frontend."""
     from repro.serve import ColoringFrontend, ColoringRequest
 
     specs = [s for s in args.stream.split("|") if s]
     graphs = [make_graph(s) for s in specs]
-    needs_l2 = args.problem != "d1"
     pgs = []
     for g, spec in zip(graphs, specs):
-        pg = partition_graph(g, args.parts, strategy=args.strategy,
-                             second_layer=needs_l2)
+        pg = make_partition(g, args)
         pgs.append(pg)
         print(f"[color] topology {spec}: n={g.n} m={g.num_edges} "
               f"sig={pg.signature[:12]}")
@@ -140,6 +152,9 @@ def main() -> None:
                     choices=list_exchanges())
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "shard_map", "simulate"])
+    ap.add_argument("--node-size", type=int, default=0, metavar="L",
+                    help="two-level partition: L parts per node "
+                         "(0 = flat; pairs with --exchange hier_delta)")
     ap.add_argument("--no-recolor-degrees", action="store_true")
     ap.add_argument("--baseline", action="store_true",
                     help="Bozdağ/Zoltan-style batched boundary coloring")
@@ -154,6 +169,13 @@ def main() -> None:
                     help="class-rebuild order used by --reduce-passes")
     args = ap.parse_args()
 
+    # Persistent XLA compilation cache: relaunching the same topology /
+    # config pays host-state build only.  Opt-in — engages only when
+    # REPRO_COMPILATION_CACHE_DIR names a directory (the pinned jax
+    # loses donation aliasing on cache-restored CPU executables, so the
+    # default stays off; see launch/cache.py).
+    enable_compilation_cache()
+
     if args.stream:
         run_stream(args)
         return
@@ -162,9 +184,7 @@ def main() -> None:
     g = make_graph(args.graph)
     print(f"[color] graph {g.name}: n={g.n} m={g.num_edges} "
           f"maxdeg={g.max_degree}")
-    needs_l2 = args.problem != "d1"
-    pg = partition_graph(g, args.parts, strategy=args.strategy,
-                         second_layer=needs_l2)
+    pg = make_partition(g, args)
     t0 = time.time()
     if args.baseline:
         if args.backend != "reference" or args.exchange != "all_gather":
@@ -221,6 +241,9 @@ def main() -> None:
     if res.comm_bytes_by_round is not None:
         print(f"[color] comm_bytes_by_round="
               f"{[int(b) for b in res.comm_bytes_by_round]}")
+    if res.comm_bytes_by_level is not None and res.comm_bytes_intra:
+        print(f"[color] comm_bytes intra-node={res.comm_bytes_intra}B "
+              f"inter-node={res.comm_bytes_inter}B")
     if not ok:
         raise SystemExit(1)
 

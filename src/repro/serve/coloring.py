@@ -549,7 +549,17 @@ class ColoringFrontend:
         max_pending: int | None = None,
         admission: str = "reject",
         tenant_quota: int | None = None,
+        compilation_cache: bool = True,
     ):
+        if compilation_cache:
+            # Persistent XLA compilation cache: a frontend restart on the
+            # same topologies pays host-state build only.  Opt-in — a
+            # no-op unless REPRO_COMPILATION_CACHE_DIR names a directory
+            # (the pinned jax drops donation aliasing on cache-restored
+            # CPU executables; see launch/cache.py).
+            from repro.launch.cache import enable_compilation_cache
+
+            enable_compilation_cache()
         if isinstance(cache, PlanCache):
             self.cache = cache
         elif cache is False:

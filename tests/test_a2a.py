@@ -72,3 +72,50 @@ def test_exchange_route_plan_tables(p, density, seed):
             if q not in receivers:
                 assert plan.src_of[k, q] == -1
     assert routed == want
+
+
+@given(p=st.integers(2, 12), density=st.floats(0.1, 1.0),
+       seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_hierarchical_route_plan_covers_all_traffic(p, density, seed):
+    """Two-level split of a random traffic graph: same-node edges land in
+    the intra plan, every cross-node edge is represented at node
+    granularity, and the up/down perms are the full member<->leader
+    ladder on every node simultaneously."""
+    from repro.core.a2a_schedule import hierarchical_route_plan
+
+    rng = np.random.default_rng(seed)
+    t = (rng.random((p, p)) < density).astype(np.int64)
+    np.fill_diagonal(t, 0)
+    # Largest divisor of p that is <= sqrt(p) (factor_parts' auto rule).
+    l = max(d for d in range(1, int(np.sqrt(p)) + 1) if p % d == 0)
+    hp = hierarchical_route_plan(t, l)
+    assert (hp.n_parts, hp.node_size, hp.n_nodes) == (p, l, p // l)
+    node = np.arange(p) // l
+    same = node[:, None] == node[None, :]
+    want_intra = {(int(s), int(d)) for s, d in zip(*np.nonzero(t * same))}
+    assert hp.intra.edges == want_intra
+    want_node = {(int(node[s]), int(node[d]))
+                 for s, d in zip(*np.nonzero(t * ~same))}
+    assert hp.node.edges == want_node
+    assert len(hp.up) == len(hp.down) == l - 1
+    for j, (up_ph, dn_ph) in enumerate(zip(hp.up, hp.down), start=1):
+        assert set(up_ph) == {(a * l + j, a * l) for a in range(hp.n_nodes)}
+        assert set(dn_ph) == {(a * l, a * l + j) for a in range(hp.n_nodes)}
+    assert hp.n_phases == (hp.intra.n_phases + hp.node.n_phases
+                           + 2 * (l - 1))
+    for b in range(hp.n_nodes):
+        assert hp.node_of(hp.leader_of(b)) == b
+
+
+def test_hierarchical_route_plan_rejects_bad_node_size():
+    from repro.core.a2a_schedule import hierarchical_route_plan
+
+    t = np.ones((6, 6), dtype=np.int64)
+    np.fill_diagonal(t, 0)
+    for bad in (0, 4, 7):
+        try:
+            hierarchical_route_plan(t, bad)
+        except ValueError:
+            continue
+        raise AssertionError(f"node_size={bad} should be rejected")

@@ -185,8 +185,10 @@ _CACHE = PlanCache(maxsize=64)
     ("reference", "halo"),
     ("reference", "delta"),
     ("reference", "sparse_delta"),
+    ("reference", "hier_delta"),
     ("pallas", "all_gather"),
     ("pallas", "sparse_delta"),
+    ("pallas", "hier_delta"),
     ("pallas_fused", "all_gather"),
     ("pallas_fused", "sparse_delta"),
 ])
@@ -234,6 +236,27 @@ def test_warm_run_no_host_rebuild_no_retrace(monkeypatch):
     assert (second.colors == first.colors).all()
     assert (seeded.colors == first.colors).all()      # deterministic runtime
     assert set(np.nonzero(masked.colors)[0]) <= set(np.nonzero(mask)[0])
+
+
+def test_warm_run_no_retrace_hier_delta(monkeypatch):
+    """The hierarchical exchange honours the compile-once contract: its
+    prepare() tables (route plans, aggregated-need masks, wire dtypes)
+    are built once, and warm ``plan.run()`` never retraces."""
+    plan = build_plan(PG, problem="d2", exchange="hier_delta",
+                      engine="simulate")
+    first = plan.run()
+    traces_after_first = plan.stats.traces
+
+    def _forbidden(*a, **kw):
+        raise AssertionError("warm hier_delta plan.run() rebuilt host state")
+
+    monkeypatch.setattr(plan_mod, "build_device_state", _forbidden)
+    monkeypatch.setattr(plan._strategy, "prepare", _forbidden)
+    second = plan.run()
+    assert plan.stats.traces == traces_after_first    # zero retraces
+    assert (second.colors == first.colors).all()
+    assert second.comm_bytes_by_level is not None
+    assert (second.comm_bytes_by_level == first.comm_bytes_by_level).all()
 
 
 def test_warm_run_no_retrace_pallas_fused(monkeypatch):
